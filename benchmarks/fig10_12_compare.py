@@ -1,0 +1,60 @@
+"""Paper Figs 10-12: Chiplet Cloud vs rented/fabricated GPU and TPU clouds,
+with NRE amortization."""
+from __future__ import annotations
+
+from benchmarks.common import (
+    A100_RENT_PER_HR, A100_TOKENS_PER_S_GPT3, GPU_OWNED_SAVINGS,
+    PALM_TOKENS_PER_S_PER_TPU, Row, TPUV4_RENT_PER_HR, TPU_OWNED_SAVINGS,
+    servers, timed)
+from repro.core import explore, tco
+from repro.core.workloads import PAPER_MODELS
+
+
+def _rented_gpu_tco_per_mtoken() -> float:
+    return A100_RENT_PER_HR / (A100_TOKENS_PER_S_GPT3 * 3600.0) * 1e6
+
+
+def _rented_tpu_tco_per_mtoken() -> float:
+    return TPUV4_RENT_PER_HR / (PALM_TOKENS_PER_S_PER_TPU * 3600.0) * 1e6
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    srv = servers()
+
+    def work():
+        return {
+            "gpt3": explore.phase2(srv, PAPER_MODELS["gpt3-175b"], ctx=2048,
+                                   keep_all=False).best.tco_per_mtoken,
+            "palm": explore.phase2(srv, PAPER_MODELS["palm-540b"], ctx=2048,
+                                   keep_all=False).best.tco_per_mtoken,
+        }
+
+    ours, us = timed(work)
+    gpu_rent = _rented_gpu_tco_per_mtoken()
+    tpu_rent = _rented_tpu_tco_per_mtoken()
+    gpu_own = gpu_rent / GPU_OWNED_SAVINGS
+    tpu_own = tpu_rent / TPU_OWNED_SAVINGS
+
+    rows.append(("fig10/gpt3_vs_rented_gpu", us / 4,
+                 f"improvement={gpu_rent / ours['gpt3']:.1f}x;paper=97x"))
+    rows.append(("fig10/palm_vs_rented_tpu", us / 4,
+                 f"improvement={tpu_rent / ours['palm']:.1f}x;paper=18x"))
+    rows.append(("fig11/gpt3_vs_owned_gpu", us / 4,
+                 f"improvement={gpu_own / ours['gpt3']:.1f}x;paper=8.3x"))
+    rows.append(("fig11/palm_vs_owned_tpu", us / 4,
+                 f"improvement={tpu_own / ours['palm']:.1f}x;paper=3.7x"))
+
+    # Fig 10's NRE amortization: (TCO+NRE)/token at Google-search scale.
+    tokens_per_year = 99_000 * 500 * 3600 * 24 * 365.25
+    nre = tco.nre_per_token(tokens_per_year) * 1e6
+    with_nre = ours["gpt3"] + nre
+    rows.append(("fig10/gpt3_with_nre_at_search_scale", 0.0,
+                 f"improvement={gpu_rent / with_nre:.1f}x;"
+                 f"nre_per_mtoken={nre:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

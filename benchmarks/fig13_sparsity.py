@@ -1,0 +1,42 @@
+"""Paper Fig 13: SCLD sparsity — TCO/token + perplexity vs sparsity, and
+max supported model scale (1.7x at 60%)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import Row, timed
+from repro.core import hardware, perf, sparsity
+from repro.core.workloads import PAPER_MODELS
+
+
+def run() -> list[Row]:
+    wl = PAPER_MODELS["gpt3-175b"]  # OPT-175B-shaped
+    chip = hardware.ChipConfig(die_mm2=140, sram_mb=226, tflops=5.5)
+    server = hardware.ServerConfig(chip=chip, chips_per_lane=17)
+
+    def work():
+        out = {}
+        for s in (0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8):
+            w = dataclasses.replace(
+                wl, weight_storage_factor=sparsity.storage_factor(s))
+            dp = perf.best_mapping(server, w, ctx=2048,
+                                   batches=(32, 64, 128, 256))
+            out[s] = dp.tco_per_mtoken if dp else None
+        return out
+
+    curve, us = timed(work)
+    rows: list[Row] = []
+    base = curve[0.0]
+    for s, v in curve.items():
+        ppl = sparsity.OPT175B_PERPLEXITY.get(round(s, 1))
+        delta = (v - base) / base * 100 if v else float("nan")
+        rows.append((f"fig13/sparsity_{int(s*100)}", us / len(curve),
+                     f"tco_delta_pct={delta:+.1f};perplexity={ppl}"))
+    rows.append(("fig13/model_scale_at_60pct", 0.0,
+                 f"scale={sparsity.max_model_scale(0.6):.2f}x;paper=1.7x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,35 @@
+"""Paper Fig 15: NRE break-even — required TCO/token improvement to justify
+the $35M NRE at a given annual spend."""
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import tco
+
+CHATGPT_ANNUAL_TCO = 255e6  # [31], $/year on GPUs
+
+
+def run() -> list[Row]:
+    def work():
+        out = {}
+        for annual in (1e6, 10e6, 100e6, CHATGPT_ANNUAL_TCO, 1e9):
+            # Break-even: savings over server life must cover NRE.
+            years = tco.SECONDS_PER_YEAR and 1.5
+            required = 1.0 / (1.0 - tco.NRE_TOTAL / (annual * years)) \
+                if annual * years > tco.NRE_TOTAL else float("inf")
+            out[annual] = required
+        return out
+
+    curve, us = timed(work)
+    rows: list[Row] = []
+    for annual, req in curve.items():
+        rows.append((f"fig15/annual_spend_{annual:.0e}", us / len(curve),
+                     f"required_improvement={req:.3f}x"))
+    # Paper: ChatGPT at $255M/yr needs only 1.14x improvement east of NRE.
+    rows.append(("fig15/chatgpt_breakeven", 0.0,
+                 f"required={curve[CHATGPT_ANNUAL_TCO]:.2f}x;paper=1.14x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,47 @@
+"""Paper Fig 7: chip size vs TCO (GPT-3) — small dies win on cost."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks.common import Row, servers, timed
+from repro.core import perf
+from repro.core.workloads import PAPER_MODELS
+
+
+def run() -> list[Row]:
+    wl = PAPER_MODELS["gpt3-175b"]
+
+    def work():
+        best_by_die = {}
+        for s in servers():
+            dp = perf.best_mapping(s, wl, ctx=2048, batches=(32, 64, 128, 256))
+            if dp is None:
+                continue
+            die = s.chip.die_mm2
+            if die not in best_by_die or \
+                    dp.tco_per_mtoken < best_by_die[die].tco_per_mtoken:
+                best_by_die[die] = dp
+        return best_by_die
+
+    best, us = timed(work)
+    rows: list[Row] = []
+    base = min(d.tco_per_mtoken for d in best.values())
+    for die in sorted(best):
+        dp = best[die]
+        rows.append((f"fig7/die_{die}mm2", us / max(len(best), 1),
+                     f"tco_per_mtoken={dp.tco_per_mtoken:.4f};"
+                     f"rel={dp.tco_per_mtoken / base:.2f}"))
+    # Paper: ~200mm2 beats >700mm2 by ~2.2x.
+    big = [d for d in best if d >= 700]
+    small = [d for d in best if 100 <= d <= 240]
+    if big and small:
+        ratio = min(best[d].tco_per_mtoken for d in big) / \
+            min(best[d].tco_per_mtoken for d in small)
+        rows.append(("fig7/big_vs_small_ratio", 0.0,
+                     f"ratio={ratio:.2f};paper=2.2"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,44 @@
+"""Paper Fig 8: optimal TCO/token vs batch size — MHA models peak at 32-256;
+MQA/GQA models stay near-optimal through batch 1024."""
+from __future__ import annotations
+
+from benchmarks.common import Row, servers, timed
+from repro.core import explore
+from repro.core.workloads import PAPER_MODELS
+
+MODELS = ["gpt3-175b", "mt-nlg-530b", "palm-540b", "llama2-70b"]
+BATCHES = (1, 4, 16, 64, 128, 256, 1024)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    srv = servers()
+    for name in MODELS:
+        wl = PAPER_MODELS[name]
+
+        def work():
+            out = {}
+            for b in BATCHES:
+                try:
+                    res = explore.phase2(srv, wl, ctx=2048, batches=(b,),
+                                         keep_all=False)
+                    out[b] = res.best.tco_per_mtoken
+                except RuntimeError:
+                    out[b] = None
+            return out
+
+        curve, us = timed(work)
+        feas = {b: v for b, v in curve.items() if v}
+        best_b = min(feas, key=feas.get)
+        for b, v in curve.items():
+            rows.append((f"fig8/{name}/batch_{b}", us / len(BATCHES),
+                         f"tco_per_mtoken={v if v else 'infeasible'}"))
+        kv = "mqa_gqa" if wl.kv_heads < wl.num_heads else "mha"
+        rows.append((f"fig8/{name}/optimal_batch", 0.0,
+                     f"batch={best_b};kv={kv}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

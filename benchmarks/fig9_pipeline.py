@@ -1,0 +1,41 @@
+"""Paper Fig 9: pipeline-stage sweep — p close to batch N maximizes
+utilization and TCO/token."""
+from __future__ import annotations
+
+from benchmarks.common import Row, timed
+from repro.core import hardware, perf
+from repro.core.workloads import PAPER_MODELS
+
+
+def run() -> list[Row]:
+    wl = PAPER_MODELS["gpt3-175b"]
+    chip = hardware.ChipConfig(die_mm2=140, sram_mb=226, tflops=5.5)
+    server = hardware.ServerConfig(chip=chip, chips_per_lane=17)
+    rows: list[Row] = []
+    for N in (16, 96):
+        def work():
+            out = {}
+            for p in (1, 2, 4, 8, 16, 32, 48, 96):
+                grid = [perf.Mapping(tp=server.num_chips, pp=p, batch=N,
+                                     microbatches=n)
+                        for n in (1, 2, 4, 8, 16, 32, 96) if n <= N]
+                res = [r for r in perf.evaluate_grid(server, wl, 2048, grid)
+                       if r]
+                if res:
+                    best = max(res, key=lambda r: r.tokens_per_s_per_chip)
+                    out[p] = best.tokens_per_s_per_chip
+            return out
+
+        curve, us = timed(work)
+        best_p = max(curve, key=curve.get)
+        for p, v in curve.items():
+            rows.append((f"fig9/batch{N}/pp_{p}", us / len(curve),
+                         f"tokens_s_chip={v:.3f}"))
+        rows.append((f"fig9/batch{N}/best_pp", 0.0,
+                     f"pp={best_p};paper=close_to_batch"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

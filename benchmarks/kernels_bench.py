@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: wall time of the jnp oracles on CPU (the Pallas
+kernels themselves target TPU; interpret-mode timing is not meaningful) plus
+SCLD traffic accounting derived from the compression format."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.sclad_matmul.sclad_matmul import (
+    TILE, UNIT_R, UNITS_PER_TILE, block_compress)
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def _time(fn, iters=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+
+    B, S, H, Hk, D = 1, 1024, 8, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hk, D), jnp.float32)
+    f = jax.jit(lambda: attention_ref(q, k, v))
+    us = _time(f)
+    flops = 4 * B * S * S * H * D * 0.5
+    rows.append(("kernels/flash_attention_ref_1k", us,
+                 f"gflops_s={flops / us / 1e3:.1f}"))
+
+    qd = q[:, 0]
+    fd = jax.jit(lambda: decode_ref(qd, k, v, jnp.int32(S)))
+    us = _time(fd)
+    rows.append(("kernels/flash_decode_ref_1k", us,
+                 f"kv_gb_s={2 * B * S * Hk * D * 4 / us / 1e3:.2f}"))
+
+    BH, Sq, P, N = 8, 512, 64, 64
+    xdt = jax.random.normal(ks[3], (BH, Sq, P), jnp.float32) * 0.1
+    a = -jnp.abs(jax.random.normal(ks[0], (BH, Sq))) * 0.1
+    bb = jax.random.normal(ks[1], (BH, Sq, N)) * 0.3
+    cc = jax.random.normal(ks[2], (BH, Sq, N)) * 0.3
+    fs = jax.jit(lambda: ssd_scan_ref(xdt, a, bb, cc)[0])
+    us = _time(fs)
+    rows.append(("kernels/ssd_scan_ref", us, f"tokens_s={BH * Sq / us * 1e6:.0f}"))
+
+    # SCLD traffic accounting (store-compressed -> load-dense savings).
+    wname = np.random.default_rng(0).standard_normal((1024, 1024)).astype(
+        np.float32)
+    for C in (16, 8, 6, 4):
+        vals, rowsi = block_compress(wname, C)
+        dense = wname.size * 2
+        stored = vals.size * 2 + rowsi.size * 4
+        rows.append((f"kernels/sclad_traffic_C{C}", 0.0,
+                     f"sparsity={1 - C / UNITS_PER_TILE:.2f};"
+                     f"bytes_ratio={stored / dense:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

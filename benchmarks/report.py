@@ -1,0 +1,51 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSON dirs.
+
+    PYTHONPATH=src python -m benchmarks.report [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def table(dirname: str, mesh: str) -> str:
+    rows = []
+    for f in sorted(glob.glob(str(ROOT / "experiments" / dirname /
+                                  f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        if d["status"] == "skipped":
+            rows.append(f"| {d['arch']} | {d['shape']} | — | — | — | — | "
+                        f"skip | — | {d['reason'][:42]} |")
+            continue
+        if d["status"] != "ok":
+            rows.append(f"| {d['arch']} | {d['shape']} | ERROR |||||||")
+            continue
+        r = d["roofline"]
+        mem = d.get("memory_analysis") or {}
+        gb = ((mem.get("temp_size_in_bytes") or 0)
+              + (mem.get("argument_size_in_bytes") or 0)) / 1e9
+        u = d.get("useful_flops_ratio") or 0
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"{r['bottleneck']} | {u:.2f} | {gb:.1f} | |")
+    head = ("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s)"
+            " | bound | useful | GB/chip | note |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    print(table(args.dir, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

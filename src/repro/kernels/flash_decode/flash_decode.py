@@ -1,0 +1,85 @@
+"""Flash GQA decode Pallas kernel: one new token against a long KV cache.
+
+Decode is the workload the paper prices (TCO per *generated* token) and is
+purely memory-bound: per token, the kernel streams the KV cache once.  The
+grid is (batch, kv_heads); each program holds the `rep` query heads that
+share one KV head in VMEM and streams that head's K/V in blocks with online
+softmax — KV bytes are read exactly once (the CC-MEM contract).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
+                   sm_scale: float):
+    """q_ref: (rep, D); k_ref/v_ref: (S, D); len_ref: (1,) in SMEM."""
+    rep, D = q_ref.shape
+    S = k_ref.shape[0]
+    length = len_ref[0]
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+
+    def body(i, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (pl.dslice(i * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(i * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # (rep, block_k)
+        pos = i * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + p.astype(v.dtype) @ v
+        return acc, m_new, l
+
+    # Only blocks below `length` contribute.
+    upper = jnp.minimum(jax.lax.div(length + block_k - 1, block_k),
+                        S // block_k)
+    acc0 = jnp.zeros((rep, D), jnp.float32)
+    m0 = jnp.full((rep, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((rep, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q, k_cache, v_cache, length, *, block_k: int = 128,
+                 interpret: bool = False):
+    """q: (B, H, D); k_cache/v_cache: (B, S, Hk, D); length: scalar int32
+    (number of valid cache positions). Returns (B, H, D)."""
+    B, H, D = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hk
+    assert S % block_k == 0
+    sm_scale = 1.0 / math.sqrt(D)
+
+    qt = q.reshape(B, Hk, rep, D)
+    kt = k_cache.transpose(0, 2, 1, 3)  # (B, Hk, S, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    lens = jnp.full((1,), length, jnp.int32)
+
+    grid = (B, Hk)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k, sm_scale=sm_scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, None, rep, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S, D), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S, D), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, D), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, rep, D), q.dtype),
+        interpret=interpret,
+    )(lens, qt, kt, vt)
+    return out.reshape(B, H, D)

@@ -1,0 +1,13 @@
+"""Jit'd public wrapper for flash decode with CPU fallback."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_decode.flash_decode import flash_decode
+from repro.kernels.flash_decode.ref import decode_ref
+
+
+def decode_attention(q, k_cache, v_cache, length, *, block_k: int = 128):
+    if jax.devices()[0].platform == "tpu":
+        return flash_decode(q, k_cache, v_cache, length, block_k=block_k)
+    return decode_ref(q, k_cache, v_cache, length)

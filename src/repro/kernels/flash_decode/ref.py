@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q, k_cache, v_cache, length):
+    """q: (B, H, D); caches: (B, S, Hk, D); length: scalar -> (B, H, D)."""
+    B, H, D = q.shape
+    S, Hk = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Hk, rep, D)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bhrd,bkhd->bhrk", qf, kf) / math.sqrt(D)
+    mask = jnp.arange(S)[None, None, None, :] < length
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrk,bkhd->bhrd", p, vf)
+    return o.reshape(B, H, D).astype(q.dtype)

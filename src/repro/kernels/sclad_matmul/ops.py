@@ -1,0 +1,41 @@
+"""Jit'd public wrapper: SCLD linear layer.
+
+``SCLDLinear`` carries block-compressed weights (the store side) and applies
+them with the Pallas kernel on TPU (interpret mode elsewhere).  HBM traffic
+for the weights is ``units_kept/16`` of dense — the paper's
+memory-capacity/bandwidth win, restated for the TPU hierarchy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sclad_matmul.sclad_matmul import (
+    block_compress, sclad_matmul)
+from repro.kernels.sclad_matmul.ref import sclad_matmul_ref
+
+
+@dataclass
+class SCLDLinear:
+    vals: jnp.ndarray  # (K/128, N/128, C, 8, 128)
+    rows: jnp.ndarray  # (K/128, N/128, C)
+
+    @classmethod
+    def from_dense(cls, w, units_kept: int) -> "SCLDLinear":
+        vals, rows = block_compress(np.asarray(w), units_kept)
+        return cls(vals=jnp.asarray(vals), rows=jnp.asarray(rows))
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.vals.shape[2] / 16.0
+
+    def __call__(self, x, interpret: bool | None = None):
+        if interpret is None:
+            interpret = jax.devices()[0].platform != "tpu"
+        if interpret and x.shape[0] > 512:
+            # Interpret mode is slow — fall back to the oracle for big calls.
+            return sclad_matmul_ref(x, self.vals, self.rows)
+        return sclad_matmul(x, self.vals, self.rows, interpret=interpret)

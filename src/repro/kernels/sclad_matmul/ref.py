@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the SCLD matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.sclad_matmul.sclad_matmul import decompress
+
+
+def sclad_matmul_ref(x, vals, rows):
+    """y = x @ decode(vals, rows) — decode in numpy, matmul in fp32."""
+    w = decompress(np.asarray(vals), np.asarray(rows))
+    return (x.astype(jnp.float32) @ jnp.asarray(w, jnp.float32)
+            ).astype(x.dtype)

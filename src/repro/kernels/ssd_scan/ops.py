@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the SSD chunk scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def ssd(x, dt, A, b, c, *, chunk: int = 128):
+    """Convenience wrapper matching the mamba block's calling convention.
+
+    x: (BH, S, P); dt: (BH, S) (already softplus'ed); A: per-row decay (BH,);
+    b, c: (BH, S, N).  Returns (y, final_state).
+    """
+    xdt = x * dt[..., None]
+    a = dt * A[:, None]
+    if jax.devices()[0].platform == "tpu":
+        return ssd_scan(xdt, a, b, c, chunk=chunk)
+    return ssd_scan_ref(xdt, a, b, c)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: naive state recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xdt, a, b, c):
+    """Sequential SSM recurrence (the definition, O(S) steps).
+
+    xdt: (BH, S, P); a: (BH, S); b, c: (BH, S, N)
+    state_t = exp(a_t) * state_{t-1} + xdt_t (outer) b_t
+    y_t = c_t . state_t
+    """
+    BH, S, P = xdt.shape
+    N = b.shape[2]
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = jnp.exp(a_t)[:, None, None] * state \
+            + x_t[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bn,bpn->bp", c_t, state)
+        return state, y_t
+
+    s0 = jnp.zeros((BH, P, N), jnp.float32)
+    xs = (xdt.astype(jnp.float32).transpose(1, 0, 2),
+          a.astype(jnp.float32).T,
+          b.astype(jnp.float32).transpose(1, 0, 2),
+          c.astype(jnp.float32).transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2).astype(xdt.dtype), state

@@ -1,0 +1,54 @@
+"""Serving launcher: batched requests against a (reduced) model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --requests 16 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, list_archs
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+from repro.serving.sampler import SamplerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = ServingEngine(
+        cfg, params, max_batch=args.max_batch,
+        max_len=64 + args.max_new,
+        sampler=SamplerConfig(temperature=args.temperature, top_k=50))
+
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 17))
+        prompt = rng.integers(1, cfg.vocab_size, size=plen)
+        engine.submit(prompt, max_new_tokens=args.max_new)
+    results = engine.run()
+    for uid, toks in sorted(results.items())[:4]:
+        print(f"req {uid}: {toks[:16]}{'...' if len(toks) > 16 else ''}")
+    s = engine.stats
+    print(f"prefill {s.prefill_tokens} tok in {s.prefill_s:.2f}s; "
+          f"generated {s.generated_tokens} tok in {s.decode_s:.2f}s "
+          f"({s.tokens_per_s:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

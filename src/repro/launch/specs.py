@@ -1,0 +1,60 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation: everything here is abstract, so the dry-run can lower
+and compile 235B-parameter training steps on a CPU host.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeSpec
+from repro.models import model as M
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs_for(cfg: ModelConfig, shape: ShapeSpec,
+                    with_labels: bool) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.is_decode:
+        S_tok = 1
+    else:
+        S_tok = S
+    batch: Dict[str, Any] = {"tokens": sds((B, S_tok), jnp.int32)}
+    if with_labels:
+        batch["labels"] = sds((B, S_tok), jnp.int32)
+    if cfg.family == "vlm" and not shape.is_decode:
+        batch["patch_embeds"] = sds((B, cfg.num_patches, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.family == "audio" and not shape.is_decode:
+        batch["frames"] = sds((B, cfg.encdec.encoder_seq_len, cfg.d_model),
+                              jnp.bfloat16)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """All abstract inputs for the step this shape lowers.
+
+    train_*   -> {params, opt_state, batch{tokens,labels}}
+    prefill_* -> {params, batch{tokens,...}}
+    decode_*  -> {params, cache, tokens, position}
+    """
+    shape = SHAPES[shape_name]
+    params = M.param_specs(cfg)
+    out: Dict[str, Any] = {"params": params}
+    if shape.kind == "train":
+        from repro.training import optimizer as opt
+        out["opt_state"] = jax.eval_shape(lambda p: opt.init(p), params)
+        out["batch"] = batch_specs_for(cfg, shape, with_labels=True)
+    elif shape.kind == "prefill":
+        out["batch"] = batch_specs_for(cfg, shape, with_labels=False)
+    else:  # decode
+        out["cache"] = M.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        out["tokens"] = sds((shape.global_batch, 1), jnp.int32)
+        out["position"] = sds((), jnp.int32)
+    return out

@@ -1,0 +1,52 @@
+"""Training launcher.
+
+Examples:
+  # CPU smoke (reduced config):
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --reduced --steps 20 --batch 4 --seq 64
+
+  # Production (on a real pod; mesh axes picked up from the runtime):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-moe-235b-a22b \
+      --steps 1000 --batch 256 --seq 4096 --ckpt /ckpts/qwen3
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import get_config, list_archs
+from repro.training import optimizer as opt_lib
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} params={cfg.param_count():,} "
+          f"devices={jax.device_count()}")
+
+    tcfg = TrainConfig(
+        steps=args.steps, seq_len=args.seq, global_batch=args.batch,
+        ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every, seed=args.seed,
+        opt=opt_lib.AdamWConfig(lr=args.lr, total_steps=args.steps))
+    state = train(cfg, tcfg)
+    print(f"finished at step {state.step}")
+
+
+if __name__ == "__main__":
+    main()

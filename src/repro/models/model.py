@@ -1,0 +1,594 @@
+"""Unified model: init / forward / loss / cache / decode for all families.
+
+Families:
+  dense   — GQA decoder-only transformer (tinyllama, stablelm, phi3, granite)
+  moe     — dense attention + MoE FFN (qwen3-moe, qwen2-moe)
+  ssm     — pure Mamba-2 stack (mamba2-1.3b)
+  hybrid  — Mamba-2 backbone + shared attention block every N (zamba2)
+  vlm     — dense LM backbone with stub patch-embedding prefix (internvl2)
+  audio   — encoder-decoder with stub frame embeddings (whisper)
+
+Layers are scanned (``lax.scan`` over stacked parameters) so the lowered HLO
+is O(1) in depth — essential for the 94-layer dry-run compiles.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models.layers import DTYPE, embed_init
+from repro.parallel import sharding
+
+Params = Dict[str, Any]
+
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _hybrid_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    per = cfg.hybrid.attn_every
+    groups = cfg.num_layers // per
+    tail = cfg.num_layers - groups * per
+    return groups, per, tail
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model)),
+        "final_norm": layers.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(keys[1], (cfg.d_model, cfg.vocab_size))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["blocks"] = _stack_init(
+            lambda k: layers.init_dense_block(cfg, k), keys[2], cfg.num_layers
+        )
+        if fam == "vlm":
+            p["patch_proj"] = layers.dense_init(keys[3], (cfg.d_model, cfg.d_model))
+    elif fam == "moe":
+        def init_moe_block(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln_attn": layers.init_norm(cfg),
+                "attn": layers.init_attention(cfg, k1),
+                "ln_mlp": layers.init_norm(cfg),
+                "moe": moe_lib.init_moe(cfg, k2),
+            }
+        p["blocks"] = _stack_init(init_moe_block, keys[2], cfg.num_layers)
+    elif fam == "ssm":
+        def init_ssm_block(k):
+            return {
+                "ln": layers.init_norm(cfg),
+                "mamba": ssm_lib.init_mamba_block(cfg, k),
+            }
+        p["blocks"] = _stack_init(init_ssm_block, keys[2], cfg.num_layers)
+    elif fam == "hybrid":
+        groups, per, tail = _hybrid_layout(cfg)
+
+        def init_ssm_block(k):
+            return {
+                "ln": layers.init_norm(cfg),
+                "mamba": ssm_lib.init_mamba_block(cfg, k),
+            }
+
+        def init_group(k):
+            return _stack_init(init_ssm_block, k, per)
+
+        p["groups"] = _stack_init(init_group, keys[2], groups)
+        if tail:
+            p["tail"] = _stack_init(init_ssm_block, keys[3], tail)
+        p["shared_attn"] = layers.init_dense_block(cfg, keys[4])
+    elif fam == "audio":
+        def init_enc_block(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln_attn": layers.init_norm(cfg),
+                "attn": layers.init_attention(cfg, k1),
+                "ln_mlp": layers.init_norm(cfg),
+                "mlp": layers.init_mlp(cfg, k2),
+            }
+
+        def init_dec_block(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "ln_self": layers.init_norm(cfg),
+                "self_attn": layers.init_attention(cfg, k1),
+                "ln_cross": layers.init_norm(cfg),
+                "cross_attn": layers.init_attention(cfg, k2),
+                "ln_mlp": layers.init_norm(cfg),
+                "mlp": layers.init_mlp(cfg, k3),
+            }
+
+        p["enc_blocks"] = _stack_init(init_enc_block, keys[2],
+                                      cfg.encdec.num_encoder_layers)
+        p["enc_norm"] = layers.init_norm(cfg)
+        p["dec_blocks"] = _stack_init(init_dec_block, keys[3], cfg.num_layers)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    specs = param_specs(cfg)
+    return sum(math.prod(x.shape) if x.shape else 1
+               for x in jax.tree.leaves(specs))
+
+
+def param_count_active(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE experts scaled by top-k/E)."""
+    import numpy as _np
+    specs = param_specs(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    total = 0.0
+    for path, leaf in flat:
+        keys = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+        n = float(_np.prod(leaf.shape)) if leaf.shape else 1.0
+        if cfg.moe is not None and "moe" in keys and "shared" not in keys \
+                and keys[-1] in ("w_gate", "w_up", "w_down"):
+            n *= cfg.moe.num_experts_per_tok / cfg.moe.num_experts
+        total += n
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill) — full-sequence
+# ---------------------------------------------------------------------------
+
+def _pad_to_multiple(h: jnp.ndarray, mult: int):
+    S = h.shape[1]
+    pad = (-S) % mult
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    return h, S
+
+
+def _maybe_remat(fn, remat: bool):
+    return jax.checkpoint(fn) if remat else fn
+
+
+def _scan_blocks(body, h, blocks, remat: bool):
+    def wrapped(c, b):
+        out, aux = body(c, b)
+        return sharding.constrain_tokens(out), aux
+
+    wrapped = _maybe_remat(wrapped, remat)
+    h, aux = jax.lax.scan(wrapped, h, blocks)
+    return h, aux
+
+
+def backbone(cfg: ModelConfig, params: Params, h: jnp.ndarray,
+             positions: jnp.ndarray, remat: bool = False,
+             encoder_out: Optional[jnp.ndarray] = None):
+    """Runs the layer stack on embedded input h (B, S, d).
+
+    Returns (h, aux_loss).
+    """
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        def body(x, blk):
+            return layers.apply_dense_block(cfg, blk, x, positions), 0.0
+        h, aux = _scan_blocks(body, h, params["blocks"], remat)
+        return h, jnp.sum(aux)
+    if fam == "moe":
+        def body(x, blk):
+            x = x + layers.attention(cfg, blk["attn"],
+                                     layers.apply_norm(cfg, blk["ln_attn"], x),
+                                     positions)
+            y, aux = moe_lib.apply_moe(cfg, blk["moe"],
+                                       layers.apply_norm(cfg, blk["ln_mlp"], x))
+            return x + y, aux
+        h, aux = _scan_blocks(body, h, params["blocks"], remat)
+        return h, jnp.sum(aux)
+    if fam == "ssm":
+        def body(x, blk):
+            y, _ = ssm_lib.apply_mamba_block(
+                cfg, blk["mamba"], layers.apply_norm(cfg, blk["ln"], x))
+            return x + y, 0.0
+        h, aux = _scan_blocks(body, h, params["blocks"], remat)
+        return h, jnp.sum(aux)
+    if fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def ssm_body(x, blk):
+            y, _ = ssm_lib.apply_mamba_block(
+                cfg, blk["mamba"], layers.apply_norm(cfg, blk["ln"], x))
+            return x + y, 0.0
+
+        def group_body(x, grp):
+            x, _ = _scan_blocks(ssm_body, x, grp, remat)
+            x = layers.apply_dense_block(cfg, shared, x, positions)
+            return x, 0.0
+
+        group_body = _maybe_remat(group_body, remat)
+        h, _ = jax.lax.scan(group_body, h, params["groups"])
+        if "tail" in params:
+            h, _ = _scan_blocks(ssm_body, h, params["tail"], remat)
+        return h, jnp.zeros(())
+    if fam == "audio":
+        assert encoder_out is not None
+
+        def body(x, blk):
+            x = x + layers.attention(
+                cfg, blk["self_attn"],
+                layers.apply_norm(cfg, blk["ln_self"], x),
+                positions, causal=True, use_rope=False)
+            xc = layers.apply_norm(cfg, blk["ln_cross"], x)
+            B, F = encoder_out.shape[0], encoder_out.shape[1]
+            ck = (encoder_out @ blk["cross_attn"]["wk"]).reshape(
+                B, F, cfg.num_kv_heads, cfg.head_dim)
+            cv = (encoder_out @ blk["cross_attn"]["wv"]).reshape(
+                B, F, cfg.num_kv_heads, cfg.head_dim)
+            x = x + layers.cross_attention(cfg, blk["cross_attn"], xc, ck, cv)
+            x = x + layers.apply_mlp(cfg, blk["mlp"],
+                                     layers.apply_norm(cfg, blk["ln_mlp"], x))
+            return x, 0.0
+        h, _ = _scan_blocks(body, h, params["dec_blocks"], remat)
+        return h, jnp.zeros(())
+    raise ValueError(fam)
+
+
+def encode_audio(cfg: ModelConfig, params: Params, frames: jnp.ndarray,
+                 remat: bool = False) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings (B, F, d)."""
+    F = frames.shape[1]
+    h = frames + layers.sinusoidal_positions(F, cfg.d_model)[None]
+    positions = jnp.arange(F)
+
+    def body(x, blk):
+        x = x + layers.attention(cfg, blk["attn"],
+                                 layers.apply_norm(cfg, blk["ln_attn"], x),
+                                 positions, causal=False, use_rope=False)
+        x = x + layers.apply_mlp(cfg, blk["mlp"],
+                                 layers.apply_norm(cfg, blk["ln_mlp"], x))
+        return x, 0.0
+
+    h, _ = _scan_blocks(body, h, params["enc_blocks"], remat)
+    return layers.apply_norm(cfg, params["enc_norm"], h)
+
+
+def unembed(cfg: ModelConfig, params: Params, h: jnp.ndarray) -> jnp.ndarray:
+    h = layers.apply_norm(cfg, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["lm_head"]
+    return sharding.constrain_logits(logits)
+
+
+def forward(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward. batch: tokens (B,S) [+ patch_embeds | frames].
+
+    Returns (logits (B, S, vocab), aux_loss).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = sharding.constrain_tokens(params["embed"][tokens])
+    encoder_out = None
+    prefix = 0
+
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"] @ params["patch_proj"]
+        h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)
+        prefix = patches.shape[1]
+    elif cfg.family == "audio":
+        encoder_out = encode_audio(cfg, params, batch["frames"], remat)
+        h = h + layers.sinusoidal_positions(S, cfg.d_model)[None]
+
+    h, orig_len = _pad_to_multiple(h, layers.Q_CHUNK
+                                   if h.shape[1] >= layers.CHUNKED_ATTN_THRESHOLD
+                                   else 1)
+    positions = jnp.arange(h.shape[1])
+    h, aux = backbone(cfg, params, h, positions, remat, encoder_out)
+    h = h[:, prefix: prefix + S]
+    logits = unembed(cfg, params, h)
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    """Next-token cross-entropy (labels = batch['labels'])."""
+    logits, aux = forward(cfg, params, batch, remat=True)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # Gather-free gold-logit extraction: elementwise mask + reduce stays local
+    # on a vocab-sharded logits tensor (no all-gather of the logits).
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = jnp.mean(logz - gold)
+    return nll + MOE_AUX_COEF * aux
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches + single-token decode
+# ---------------------------------------------------------------------------
+
+def kv_store_dtype(cfg: ModelConfig):
+    """KV-cache storage dtype (bf16 default; f8 halves bytes/capacity)."""
+    return jnp.float8_e4m3fn if cfg.kv_dtype == "f8" else DTYPE
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    fam = cfg.family
+    KVD = kv_store_dtype(cfg)
+    hk, hd, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    if fam in ("dense", "moe", "vlm"):
+        ctx = max_len + (cfg.num_patches if fam == "vlm" else 0)
+        return {
+            "k": jnp.zeros((L, batch, ctx, hk, hd), KVD),
+            "v": jnp.zeros((L, batch, ctx, hk, hd), KVD),
+        }
+    if fam == "ssm":
+        one = ssm_lib.init_mamba_cache(cfg, batch)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape), one)
+    if fam == "hybrid":
+        groups, per, tail = _hybrid_layout(cfg)
+        one = ssm_lib.init_mamba_cache(cfg, batch)
+        c = {
+            "groups": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (groups, per) + x.shape), one),
+            "attn_k": jnp.zeros((groups, batch, max_len, hk, hd), KVD),
+            "attn_v": jnp.zeros((groups, batch, max_len, hk, hd), KVD),
+        }
+        if tail:
+            c["tail"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (tail,) + x.shape), one)
+        return c
+    if fam == "audio":
+        F = cfg.encdec.encoder_seq_len
+        return {
+            "k": jnp.zeros((L, batch, max_len, hk, hd), KVD),
+            "v": jnp.zeros((L, batch, max_len, hk, hd), KVD),
+            "cross_k": jnp.zeros((L, batch, F, hk, hd), KVD),
+            "cross_v": jnp.zeros((L, batch, F, hk, hd), KVD),
+        }
+    raise ValueError(fam)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: jnp.ndarray, position: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One autoregressive step. tokens: (B, 1); position: scalar int32
+    (index of the new token within the cache context).
+
+    Returns (logits (B, 1, vocab), updated cache).
+    """
+    fam = cfg.family
+    h = params["embed"][tokens]
+    B = tokens.shape[0]
+
+    if fam in ("dense", "moe", "vlm"):
+        pos = position + (cfg.num_patches if fam == "vlm" else 0)
+
+        def body(x, blk_kv):
+            blk, kc, vc = blk_kv
+            a, kc, vc = layers.attention_decode(
+                cfg, blk["attn"],
+                layers.apply_norm(cfg, blk["ln_attn"], x), kc, vc, pos)
+            x = x + a
+            if fam == "moe":
+                y, _ = moe_lib.apply_moe(
+                    cfg, blk["moe"], layers.apply_norm(cfg, blk["ln_mlp"], x))
+                x = x + y
+            else:
+                x = x + layers.apply_mlp(
+                    cfg, blk["mlp"], layers.apply_norm(cfg, blk["ln_mlp"], x))
+            return x, (kc, vc)
+
+        h, (k_new, v_new) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": k_new, "v": v_new}
+    elif fam == "ssm":
+        def body(x, blk_c):
+            blk, c = blk_c
+            y, c = ssm_lib.apply_mamba_decode(
+                cfg, blk["mamba"], c, layers.apply_norm(cfg, blk["ln"], x))
+            return x + y, c
+
+        h, new_c = jax.lax.scan(body, h, (params["blocks"], cache))
+        new_cache = new_c
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def ssm_body(x, blk_c):
+            blk, c = blk_c
+            y, c = ssm_lib.apply_mamba_decode(
+                cfg, blk["mamba"], c, layers.apply_norm(cfg, blk["ln"], x))
+            return x + y, c
+
+        def group_body(x, xs):
+            grp, gc, kc, vc = xs
+            x, gc = jax.lax.scan(ssm_body, x, (grp, gc))
+            a, kc, vc = layers.attention_decode(
+                cfg, shared["attn"],
+                layers.apply_norm(cfg, shared["ln_attn"], x), kc, vc, position)
+            x = x + a
+            x = x + layers.apply_mlp(
+                cfg, shared["mlp"], layers.apply_norm(cfg, shared["ln_mlp"], x))
+            return x, (gc, kc, vc)
+
+        h, (gc, kc, vc) = jax.lax.scan(
+            group_body, h,
+            (params["groups"], cache["groups"], cache["attn_k"], cache["attn_v"]))
+        new_cache = {"groups": gc, "attn_k": kc, "attn_v": vc}
+        if "tail" in cache:
+            h, tc = jax.lax.scan(ssm_body, h, (params["tail"], cache["tail"]))
+            new_cache["tail"] = tc
+    elif fam == "audio":
+        h = h + layers.sinusoidal_positions(
+            int(cache["k"].shape[2]), cfg.d_model)[position][None, None]
+
+        def body(x, xs):
+            blk, kc, vc, ck, cv = xs
+            a, kc, vc = layers.attention_decode(
+                cfg, blk["self_attn"],
+                layers.apply_norm(cfg, blk["ln_self"], x), kc, vc, position,
+                use_rope=False)
+            x = x + a
+            x = x + layers.cross_attention(
+                cfg, blk["cross_attn"],
+                layers.apply_norm(cfg, blk["ln_cross"], x),
+                ck.astype(x.dtype), cv.astype(x.dtype))
+            x = x + layers.apply_mlp(
+                cfg, blk["mlp"], layers.apply_norm(cfg, blk["ln_mlp"], x))
+            return x, (kc, vc)
+
+        h, (k_new, v_new) = jax.lax.scan(
+            body, h, (params["dec_blocks"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, k=k_new, v=v_new)
+    else:
+        raise ValueError(fam)
+
+    logits = unembed(cfg, params, h)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            max_len: int) -> Tuple[jnp.ndarray, Params]:
+    """Process the prompt, returning (last-position logits (B, vocab), cache).
+
+    Implemented as forward + recompute of K/V into the cache for attention
+    families; SSM caches carry the final state from the chunked scan.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    fam = cfg.family
+    cache = init_cache(cfg, B, max_len)
+    h = params["embed"][tokens]
+    prefix = 0
+    encoder_out = None
+    if fam == "vlm":
+        patches = batch["patch_embeds"] @ params["patch_proj"]
+        h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)
+        prefix = patches.shape[1]
+    elif fam == "audio":
+        encoder_out = encode_audio(cfg, params, batch["frames"])
+        h = h + layers.sinusoidal_positions(S, cfg.d_model)[None]
+
+    positions = jnp.arange(h.shape[1])
+    S_ctx = h.shape[1]
+
+    if fam in ("dense", "moe", "vlm", "audio"):
+        blocks = params["blocks"] if fam != "audio" else params["dec_blocks"]
+
+        def body(x, blk):
+            # Recompute K/V for the cache (weights are cheap to re-apply and
+            # this keeps backbone() single-sourced).
+            attn_p = blk["attn"] if fam != "audio" else blk["self_attn"]
+            ln = blk["ln_attn"] if fam != "audio" else blk["ln_self"]
+            xn = layers.apply_norm(cfg, ln, x)
+            use_rope = fam != "audio"
+            q, k, v = layers._project_qkv(cfg, attn_p, xn, xn)
+            if use_rope:
+                q = layers.apply_rope(cfg, q, positions)
+                k = layers.apply_rope(cfg, k, positions)
+            if S_ctx >= layers.CHUNKED_ATTN_THRESHOLD and \
+                    S_ctx % layers.Q_CHUNK == 0:
+                a = layers.chunked_attention(q, k, v, causal=True)
+            else:
+                mask = jnp.tril(jnp.ones((S_ctx, S_ctx), bool))[None, None, None]
+                a = layers._sdpa(cfg, q, k, v, mask)
+            x = x + a @ attn_p["wo"]
+            extra = {}
+            if fam == "audio":
+                F = encoder_out.shape[1]
+                ck = (encoder_out @ blk["cross_attn"]["wk"]).reshape(
+                    B, F, cfg.num_kv_heads, cfg.head_dim)
+                cv = (encoder_out @ blk["cross_attn"]["wv"]).reshape(
+                    B, F, cfg.num_kv_heads, cfg.head_dim)
+                xc = layers.apply_norm(cfg, blk["ln_cross"], x)
+                x = x + layers.cross_attention(cfg, blk["cross_attn"], xc, ck, cv)
+                extra = {"cross_k": ck.astype(kv_store_dtype(cfg)),
+                         "cross_v": cv.astype(kv_store_dtype(cfg))}
+            if fam == "moe":
+                y, _ = moe_lib.apply_moe(
+                    cfg, blk["moe"], layers.apply_norm(cfg, blk["ln_mlp"], x))
+                x = x + y
+            else:
+                x = x + layers.apply_mlp(
+                    cfg, blk["mlp"], layers.apply_norm(cfg, blk["ln_mlp"], x))
+            kvd = kv_store_dtype(cfg)
+            return x, dict(k=k.astype(kvd), v=v.astype(kvd), **extra)
+
+        h, kv = jax.lax.scan(body, h, blocks)
+        pad = cache["k"].shape[2] - S_ctx
+        k_full = jnp.pad(kv["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v_full = jnp.pad(kv["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = dict(cache, k=k_full, v=v_full)
+        if fam == "audio":
+            cache["cross_k"] = kv["cross_k"]
+            cache["cross_v"] = kv["cross_v"]
+    elif fam == "ssm":
+        def body(x, blk):
+            y, st = ssm_lib.apply_mamba_block(
+                cfg, blk["mamba"], layers.apply_norm(cfg, blk["ln"], x))
+            return x + y, st
+
+        h, states = jax.lax.scan(body, h, params["blocks"])
+        cache = states  # stacked {"state", "conv"} matches init_cache layout
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def ssm_body(x, blk):
+            y, st = ssm_lib.apply_mamba_block(
+                cfg, blk["mamba"], layers.apply_norm(cfg, blk["ln"], x))
+            return x + y, st
+
+        def group_body(x, grp):
+            x, st = jax.lax.scan(ssm_body, x, grp)
+            xn = layers.apply_norm(cfg, shared["ln_attn"], x)
+            q, k, v = layers._project_qkv(cfg, shared["attn"], xn, xn)
+            q = layers.apply_rope(cfg, q, positions)
+            k = layers.apply_rope(cfg, k, positions)
+            if S_ctx >= layers.CHUNKED_ATTN_THRESHOLD and \
+                    S_ctx % layers.Q_CHUNK == 0:
+                a = layers.chunked_attention(q, k, v, causal=True)
+            else:
+                mask = jnp.tril(jnp.ones((S_ctx, S_ctx), bool))[None, None, None]
+                a = layers._sdpa(cfg, q, k, v, mask)
+            x = x + a @ shared["attn"]["wo"]
+            x = x + layers.apply_mlp(
+                cfg, shared["mlp"], layers.apply_norm(cfg, shared["ln_mlp"], x))
+            return x, (st, k.astype(kv_store_dtype(cfg)),
+                       v.astype(kv_store_dtype(cfg)))
+
+        h, (gst, gk, gv) = jax.lax.scan(group_body, h, params["groups"])
+        pad = cache["attn_k"].shape[2] - S_ctx
+        cache["attn_k"] = jnp.pad(gk, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["attn_v"] = jnp.pad(gv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["groups"] = gst
+        if "tail" in params:
+            h, tst = jax.lax.scan(ssm_body, h, params["tail"])
+            cache["tail"] = tst
+    else:
+        raise ValueError(fam)
+
+    logits = unembed(cfg, params, h[:, -1])
+    return logits, cache

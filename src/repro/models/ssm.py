@@ -1,0 +1,226 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Implements the chunked SSD algorithm in pure jnp: intra-chunk contributions in
+the quadratic "attention-like" dual form, inter-chunk contributions via a
+linear state recurrence (lax.scan over chunks), plus the O(1)-state single
+token decode update.  Heads are sharded over the ``model`` mesh axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import DTYPE, dense_init, rmsnorm_gated
+
+Params = Dict[str, jnp.ndarray]
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    H = s.nheads(cfg.d_model)
+    G, N, P = s.ngroups, s.state_size, s.head_dim
+    conv_dim = d_inner + 2 * G * N
+    return d_inner, H, G, N, P, conv_dim
+
+
+def init_mamba_block(cfg: ModelConfig, key) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, H, G, N, P, conv_dim = dims(cfg)
+    d_in_proj = 2 * d_inner + 2 * G * N + H
+    ks = jax.random.split(key, 3)
+    # A in [1, 16) as in the reference implementation.
+    a0 = jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj)),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, conv_dim), in_axis=0),
+        "conv_b": jnp.zeros((conv_dim,), DTYPE),
+        "A_log": jnp.log(a0),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), DTYPE),
+        "out_proj": dense_init(ks[2], (d_inner, d)),
+    }
+
+
+def _causal_conv(w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d via k shifted adds. x: (B, S, C); w: (k, C)."""
+    k = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def _segsum_decay(a_cum: jnp.ndarray) -> jnp.ndarray:
+    """exp(a_cum[..., i] - a_cum[..., j]) masked to i >= j (lower-tri).
+
+    a_cum: (..., Q) -> (..., Q, Q).
+    """
+    Q = a_cum.shape[-1]
+    diff = a_cum[..., :, None] - a_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # Mask BEFORE exp: exp of the (positive) upper-triangle diffs overflows
+    # to inf, and inf * 0 cotangents would poison the backward pass.
+    return jnp.exp(jnp.where(mask, diff, -jnp.inf))
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """SSD scan.
+
+    x:  (b, S, H, P)  — inputs per head
+    dt: (b, S, H)     — positive step sizes (already softplus'ed)
+    A:  (H,)          — negative decay rates
+    B:  (b, S, G, N)  — input projections (G groups, H % G == 0)
+    C:  (b, S, G, N)  — output projections
+    Returns (y (b, S, H, P), final_state (b, H, P, N)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    Hg = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+
+    f32 = jnp.float32
+    xdt = (x.astype(f32) * dt[..., None].astype(f32))  # (b,S,H,P)
+    a_bar = dt.astype(f32) * A.astype(f32)  # (b,S,H)
+
+    # Chunked views.
+    def ch(t, shape):
+        return t.reshape((b, nc, Q) + shape)
+
+    x_c = ch(xdt, (G, Hg, P))
+    a_c = ch(a_bar, (G, Hg))  # (b,nc,Q,G,Hg)
+    B_c = ch(B.astype(f32), (G, N))
+    C_c = ch(C.astype(f32), (G, N))
+
+    a_cum = jnp.cumsum(a_c, axis=2)  # (b,nc,Q,G,Hg)
+    a_last = a_cum[:, :, -1]  # (b,nc,G,Hg)
+
+    # Intra-chunk (quadratic dual form).
+    L = _segsum_decay(jnp.moveaxis(a_cum, 2, -1))  # (b,nc,G,Hg,Q,Q)
+    y_diag = jnp.einsum(
+        "bcqgn,bckgn,bcghqk,bckghp->bcqghp", C_c, B_c, L, x_c
+    )
+
+    # Chunk input states: contribution of each chunk to the carried state.
+    decay_states = jnp.exp(a_last[:, :, None] - a_cum)  # (b,nc,Q,G,Hg)
+    states = jnp.einsum("bckgn,bckgh,bckghp->bcghpn", B_c, decay_states, x_c)
+
+    # Inter-chunk recurrence.
+    chunk_decay = jnp.exp(a_last)  # (b,nc,G,Hg)
+    if initial_state is None:
+        s0 = jnp.zeros((b, G, Hg, P, N), f32)
+    else:
+        s0 = initial_state.reshape(b, G, Hg, P, N).astype(f32)
+
+    def step(s, inp):
+        new, dec = inp  # (b,G,Hg,P,N), (b,G,Hg)
+        s_prev = s
+        s = s * dec[..., None, None] + new
+        return s, s_prev
+
+    states_t = jnp.moveaxis(states, 1, 0)  # (nc,b,G,Hg,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)
+    final, prev_states = jax.lax.scan(step, s0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,G,Hg,P,N)
+
+    # Inter-chunk output: state at chunk start decayed to position q.
+    out_decay = jnp.exp(a_cum)  # (b,nc,Q,G,Hg)
+    y_off = jnp.einsum(
+        "bcqgn,bcghpn,bcqgh->bcqghp", C_c, prev_states, out_decay
+    )
+
+    y = (y_diag + y_off).reshape(b, S, H, P)
+    return y, final.reshape(b, H, P, N)
+
+
+def apply_mamba_block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                      initial_state=None):
+    """x: (B, S, d) -> (out (B, S, d), cache dict with final ssm 'state'
+    (B,H,P,N) and raw 'conv' window (B, k-1, conv_dim))."""
+    s = cfg.ssm
+    d_inner, H, G, N, P, conv_dim = dims(cfg)
+    B_, S_, _ = x.shape
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: d_inner + conv_dim]
+    dt_raw = zxbcdt[..., -H:]
+
+    conv_tail = xBC[:, -(s.conv_kernel - 1):, :]  # raw inputs for decode
+    xBC = _causal_conv(p["conv_w"], p["conv_b"], xBC)
+    x_ssm = xBC[..., :d_inner].reshape(B_, S_, H, P)
+    B_ssm = xBC[..., d_inner: d_inner + G * N].reshape(B_, S_, G, N)
+    C_ssm = xBC[..., d_inner + G * N:].reshape(B_, S_, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, state = ssd_chunked(x_ssm, dt, A, B_ssm, C_ssm, s.chunk_size,
+                           initial_state)
+    y = y + x_ssm.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S_, d_inner).astype(x.dtype)
+    y = rmsnorm_gated(p["norm_scale"], y, z)
+    return y @ p["out_proj"], {"state": state, "conv": conv_tail}
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) per token)
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_inner, H, G, N, P, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), DTYPE),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def apply_mamba_decode(cfg: ModelConfig, p: Params, cache, x: jnp.ndarray):
+    """x: (B, 1, d). Returns (out (B, 1, d), cache)."""
+    s = cfg.ssm
+    d_inner, H, G, N, P, conv_dim = dims(cfg)
+    B_ = x.shape[0]
+
+    zxbcdt = x[:, 0] @ p["in_proj"]  # (B, d_in_proj)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: d_inner + conv_dim]
+    dt_raw = zxbcdt[..., -H:]
+
+    # Rolling conv state: window = [conv_cache, xBC].
+    win = jnp.concatenate([cache["conv"], xBC[:, None, :]], axis=1)  # (B,k,C)
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_conv = win[:, 1:]
+
+    x_ssm = xBC[..., :d_inner].reshape(B_, H, P)
+    B_ssm = xBC[..., d_inner: d_inner + G * N].reshape(B_, G, N)
+    C_ssm = xBC[..., d_inner + G * N:].reshape(B_, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)  # (B,H)
+
+    Hg = H // G
+    xdt = x_ssm.astype(jnp.float32) * dt[..., None]  # (B,H,P)
+    inc = jnp.einsum("bgn,bghp->bghpn", B_ssm.astype(jnp.float32),
+                     xdt.reshape(B_, G, Hg, P)).reshape(B_, H, P, N)
+    state = cache["state"] * dA[..., None, None] + inc
+    y = jnp.einsum("bgn,bghpn->bghp", C_ssm.astype(jnp.float32),
+                   state.reshape(B_, G, Hg, P, N)).reshape(B_, H, P)
+    y = y + x_ssm.astype(jnp.float32) * p["D"][None, :, None]
+
+    y = y.reshape(B_, 1, d_inner).astype(x.dtype)
+    y = rmsnorm_gated(p["norm_scale"], y, z[:, None, :])
+    out = y @ p["out_proj"]
+    return out, {"conv": new_conv, "state": state}

@@ -1,0 +1,282 @@
+"""Sharding rules: parameter, cache, batch and optimizer-state PartitionSpecs.
+
+Baseline layout (the "paper-faithful" mapping — tensor parallelism over
+``model``, fully-sharded (FSDP/ZeRO-3 style) parameter+optimizer storage over
+``data``, replication over ``pod``):
+
+  * attention/MLP weights: 2-D sharded (fan-in over one axis, fan-out over the
+    other) — this is the 2-D weight-stationary layout of Pope et al. [37] that
+    the paper adopts for the feed-forward network;
+  * MoE expert tensors: expert dim over ``model``, expert hidden dim over
+    ``data`` (expert parallelism × tensor parallelism);
+  * KV caches: batch over data axes, sequence over ``model`` (split-KV decode:
+    each model shard owns a contiguous stripe of the context);
+  * SSM states: batch over data axes, heads over ``model``.
+
+Rules are path-based so they apply to scan-stacked parameters (leading layer
+dims map to None).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def _param_rule(cfg: ModelConfig, path: str, ndim: int, mode: str,
+                fsdp: str = "data", tp: str = "model") -> P:
+    """Spec for one parameter given its path and rank.
+
+    mode="train": FSDP (ZeRO-3) over ``data`` x TP over ``model`` — weights
+    are 2-D sharded and all-gathered per layer inside the step; optimizer
+    state stays fully sharded.
+
+    mode="serve": weights live resident (no per-token regather): TP over
+    ``model`` only, except MoE expert tensors which use expert parallelism
+    over ``data`` x TP over ``model`` — the expert dim is batch-like in the
+    expert einsum so no gather is induced.
+
+    The rank-suffix convention: rules name the trailing dims; leading stacked
+    layer/group dims are padded with None.
+    """
+    serve = mode == "serve"
+    fs = None if serve else fsdp
+
+    def pad(*spec):
+        return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+    leaf = path.rsplit("/", 1)[-1]
+    tp_n = _AXES_SIZES.get(tp, 1)
+    vocab_ok = cfg.vocab_size % tp_n == 0
+
+    # Embedding / unembedding. When the vocab doesn't divide the model axis
+    # (e.g. mamba2's 50280), shard the d_model dim instead.
+    if leaf == "embed":
+        if vocab_ok:
+            return P(tp, fs)
+        return P(None, tp if serve else fsdp)
+    if leaf == "lm_head":
+        if vocab_ok:
+            return P(fs, tp)
+        return P(tp if serve else fsdp, None)
+    if leaf == "patch_proj":
+        return P(fs, tp)
+
+    # Norm scales/biases: replicated (small).
+    if leaf in ("scale", "bias", "conv_b", "A_log", "D", "dt_bias"):
+        return pad(None)
+    if leaf == "norm_scale":
+        return pad(tp)
+
+    # Attention projections.
+    if leaf in ("wq", "wk", "wv"):
+        return pad(fs, tp)
+    if leaf == "wo":
+        return pad(tp, fs)
+    if leaf in ("bq", "bk", "bv"):
+        return pad(tp)
+
+    # Dense / shared-expert MLP.
+    if leaf in ("w_gate", "w_up", "w_down"):
+        if "moe" in path and "shared" not in path:
+            # Expert-stacked: (..., E, d, f) or (..., E, f, d).
+            # Expert parallelism over ``data`` x TP, in BOTH modes: the
+            # expert dim is batch-like (never gathered) and storage is
+            # 256-way sharded.  When the manual-collective path applies
+            # (E divides the data axis), TP splits *d_model* so the MoE
+            # all-to-alls carry d/tp-sliced payloads and the up-projection
+            # psum runs at h-volume (see moe.apply_moe_manual); otherwise
+            # TP splits the hidden dim (plain Megatron-in-expert).
+            ep_n = _AXES_SIZES.get(fsdp, 1)
+            d_layout = cfg.moe is not None and ep_n > 1 \
+                and cfg.moe.num_experts % ep_n == 0
+            if d_layout:
+                if leaf == "w_down":
+                    return pad(fsdp, None, tp)
+                return pad(fsdp, tp, None)
+            if leaf == "w_down":
+                return pad(fsdp, tp, None)
+            return pad(fsdp, None, tp)
+        if leaf == "w_down":
+            return pad(tp, fs)
+        return pad(fs, tp)
+    if leaf == "router":
+        return pad(fs, None)
+
+    # Mamba2.
+    if leaf == "in_proj":
+        return pad(fs, tp)
+    if leaf == "conv_w":
+        return pad(None, tp)
+    if leaf == "out_proj":
+        return pad(tp, fs)
+
+    return pad(None)
+
+
+def param_specs(cfg: ModelConfig, params_shape, mode: str = "train") -> Any:
+    """PartitionSpec pytree matching params (or their ShapeDtypeStructs)."""
+    def rule(path, leaf):
+        return _param_rule(cfg, _path_str(path), len(leaf.shape), mode)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, cache_shape, dp: Optional[Tuple[str, ...]],
+                batch: int, tp: str = "model") -> Any:
+    """dp = batch axes (None to replicate small batches)."""
+    dpa = dp if (dp and batch % _axes_size_hint(dp) == 0) else None
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        path_s = _path_str(path)
+        name = path_s.rsplit("/", 1)[-1]
+        if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+            # (L, B, S, Hk, hd): batch over dp, sequence over model.
+            return P(None, dpa, tp, None, None)
+        if name == "state":
+            # (..., B, H, P, N): heads over model.
+            return P(*([None] * (nd - 4)), dpa, tp, None, None)
+        if name == "conv":
+            # (..., B, k-1, conv_dim): channels over model.
+            return P(*([None] * (nd - 3)), dpa, None, tp)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+_AXES_SIZES: Dict[str, int] = {}
+_DP_AXES: Tuple[str, ...] = ()
+_TP_AXIS: Optional[str] = None
+
+
+def set_mesh_axis_sizes(mesh) -> None:
+    global _AXES_SIZES, _DP_AXES, _TP_AXIS
+    _AXES_SIZES = dict(zip(mesh.axis_names, mesh.devices.shape))
+    _DP_AXES = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    _TP_AXIS = "model" if "model" in mesh.axis_names else None
+
+
+def _axes_size_hint(axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= _AXES_SIZES.get(a, 1)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, batch_shape, dp: Optional[Tuple[str, ...]],
+                batch: int) -> Any:
+    dpa = dp if (dp and batch % _axes_size_hint(dp) == 0) else None
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        return P(dpa, *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def sanitize_specs(spec_tree, shape_tree) -> Any:
+    """Drop sharding on any dim the mesh axis doesn't divide evenly.
+
+    jax.jit argument shardings require exact divisibility; internal
+    with_sharding_constraint does not.  This keeps rules simple and fixes up
+    the stragglers (60 experts, 50280 vocab, batch 1, seq 1500, ...).
+    """
+    def fix(spec, leaf):
+        dims = leaf.shape
+        out = []
+        for i, axes in enumerate(tuple(spec) + (None,) * (len(dims) - len(spec))):
+            if axes is None:
+                out.append(None)
+                continue
+            axes_t = axes if isinstance(axes, tuple) else (axes,)
+            size = 1
+            for a in axes_t:
+                size *= _AXES_SIZES.get(a, 1)
+            out.append(axes if dims[i] % size == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, spec_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, KeyError, TypeError):
+        return x
+
+
+SEQUENCE_PARALLEL = True
+
+
+def _seq_shardable(x) -> bool:
+    """Sequence-parallel residuals (Korthikanti et al.): between blocks the
+    (B, S, d) stream is sharded over `model` along S, so saved-for-backward
+    activations cost 1/tp the HBM and the TP all-reduce becomes a
+    reduce-scatter + all-gather pair (half the wire bytes)."""
+    if not SEQUENCE_PARALLEL or _TP_AXIS is None or x.ndim < 3:
+        return False
+    tp_n = _AXES_SIZES.get(_TP_AXIS, 1)
+    return tp_n > 1 and x.shape[1] % tp_n == 0 and x.shape[1] > 1
+
+
+def constrain_tokens(x):
+    """Anchor a (B, S, d) activation: batch over data axes; S over model
+    when sequence parallelism applies (never for single-token decode)."""
+    if not _DP_AXES:
+        return x
+    seq = _TP_AXIS if _seq_shardable(x) else None
+    return constrain(x, P(_DP_AXES, seq, *([None] * (x.ndim - 2))))
+
+
+def constrain_logits(x):
+    """Anchor (B, S, V) logits: batch over data; S over model when
+    sequence-parallel (keeps the fp32 loss buffer sharded), else vocab."""
+    if not _DP_AXES:
+        return x
+    if _seq_shardable(x):
+        return constrain(x, P(_DP_AXES, _TP_AXIS,
+                              *([None] * (x.ndim - 2))))
+    return constrain(x, P(_DP_AXES, *([None] * (x.ndim - 2)), _TP_AXIS))
+
+
+def constrain_heads(x):
+    """Anchor a (B, S, H, D) attention tensor: batch over data, heads TP."""
+    if not _DP_AXES:
+        return x
+    return constrain(x, P(_DP_AXES, None, _TP_AXIS, None))

@@ -1,0 +1,122 @@
+"""Checkpointing: atomic, async, keep-last-k, mesh-portable.
+
+Layout: <dir>/step_<n>/ containing
+  * meta.json           — step, arch name, pytree structure
+  * arrays.npz          — flattened leaves keyed by path
+
+Writes go to a temp dir then are atomically renamed, so a job killed
+mid-checkpoint never corrupts the latest restore point (node-failure
+tolerance).  ``save_async`` runs serialization on a background thread so the
+training loop only blocks on the device->host copy.
+
+Arrays are saved unsharded (fetched to host); ``restore`` can therefore load
+into any mesh shape — elastic rescaling is a restore-with-different-mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> List[Tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't serialize ml_dtypes
+            arr = arr.astype(np.float32)
+        out.append((key, arr))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, keep: int = 3,
+         extra_meta: Optional[Dict[str, Any]] = None) -> str:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f".tmp_step_{step}"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **{k: v for k, v in leaves})
+    meta = {"step": step, "keys": [k for k, _ in leaves],
+            "time": time.time(), **(extra_meta or {})}
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+
+    # Retention: keep the most recent `keep` checkpoints.
+    steps = sorted(int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*"))
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s}", ignore_errors=True)
+    return str(final)
+
+
+class AsyncCheckpointer:
+    """Serializes on a background thread; at most one outstanding save."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, ckpt_dir: str, step: int, tree, keep: int = 3) -> None:
+        self.wait()
+        # Device->host copy happens here (blocking, consistent snapshot);
+        # file IO happens on the thread.
+        host_tree = jax.tree.map(np.asarray, tree)
+
+        def work():
+            self.last_path = save(ckpt_dir, step, host_tree, keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like) -> Any:
+    """Restore into the structure (and shardings) of `like`.
+
+    `like` may be a pytree of arrays or ShapeDtypeStructs; arrays are
+    device-put against each leaf's sharding when present — this is how a
+    checkpoint taken on one mesh is reloaded onto another (elastic restart).
+    """
+    path = Path(ckpt_dir) / f"step_{step}" / "arrays.npz"
+    data = np.load(path)
+    flat = jax.tree_util.tree_flatten_with_path(like)
+    leaves, treedef = flat[0], flat[1]
+    out = []
+    for p, leaf in leaves:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None and hasattr(sharding, "mesh"):
+            out.append(jax.device_put(arr.astype(leaf.dtype), sharding))
+        else:
+            out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

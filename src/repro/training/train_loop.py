@@ -1,0 +1,109 @@
+"""Training loop: jit'd step, async checkpointing, restart, metrics.
+
+Fault-tolerance contract:
+  * checkpoints are atomic and keep-last-k (training/checkpoint.py);
+  * the data stream is a pure function of the step index (training/data.py),
+    so restart at step k reproduces the exact remaining stream;
+  * restore() re-shards onto whatever mesh the restarted job has — scaling
+    the pod count between runs is a restore, not a migration.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training import checkpoint as ckpt_lib
+from repro.training import data as data_lib
+from repro.training import optimizer as opt_lib
+from repro.launch import steps as steps_lib
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    opt: opt_lib.AdamWConfig = field(default_factory=opt_lib.AdamWConfig)
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: opt_lib.AdamWState
+    step: int
+
+
+def init_state(cfg: ModelConfig, seed: int = 0) -> TrainState:
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    return TrainState(params=params, opt_state=opt_lib.init(params), step=0)
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig,
+          state: Optional[TrainState] = None,
+          hooks: Optional[List[Callable[[int, Dict], None]]] = None
+          ) -> TrainState:
+    stream = data_lib.TokenStream(data_lib.DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+        global_batch=tcfg.global_batch, seed=tcfg.seed))
+
+    start_step = 0
+    if state is None:
+        if tcfg.ckpt_dir and (ls := ckpt_lib.latest_step(tcfg.ckpt_dir)) \
+                is not None:
+            state = init_state(cfg, tcfg.seed)
+            restored = ckpt_lib.restore(
+                tcfg.ckpt_dir, ls,
+                {"params": state.params, "opt": state.opt_state})
+            state = TrainState(params=restored["params"],
+                               opt_state=restored["opt"], step=ls)
+            start_step = ls
+        else:
+            state = init_state(cfg, tcfg.seed)
+    else:
+        start_step = state.step
+
+    step_fn = jax.jit(steps_lib.make_train_step(cfg, tcfg.opt))
+    saver = ckpt_lib.AsyncCheckpointer()
+    params, opt_state = state.params, state.opt_state
+
+    losses = []
+    t0 = time.perf_counter()
+    for i in range(start_step, tcfg.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jnp.zeros(
+                (tcfg.global_batch, cfg.num_patches, cfg.d_model),
+                jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (tcfg.global_batch, cfg.encdec.encoder_seq_len, cfg.d_model),
+                jnp.bfloat16)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if hooks:
+            for h in hooks:
+                h(i, {k: float(v) for k, v in metrics.items()})
+        if tcfg.log_every and (i + 1) % tcfg.log_every == 0:
+            dt = time.perf_counter() - t0
+            tps = tcfg.global_batch * tcfg.seq_len * tcfg.log_every / dt
+            print(f"step {i+1:5d} loss {loss:.4f} "
+                  f"grad_norm {float(metrics['grad_norm']):.3f} "
+                  f"({tps:,.0f} tok/s)", flush=True)
+            t0 = time.perf_counter()
+        if tcfg.ckpt_dir and (i + 1) % tcfg.ckpt_every == 0:
+            saver.save(tcfg.ckpt_dir, i + 1,
+                       {"params": params, "opt": opt_state})
+    saver.wait()
+    return TrainState(params=params, opt_state=opt_state, step=tcfg.steps)

@@ -1,0 +1,74 @@
+"""CC-MEM behavioral model: bank-conflict, burst and SCLD decoder
+properties (paper §3.1/§3.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ccmem
+from repro.core.ccmem import AccessStream, CCMEMConfig, simulate
+
+
+def test_single_burst_stream_near_peak_of_one_group():
+    cfg = CCMEMConfig()
+    r = simulate([AccessStream(words=1 << 20, kind="burst")], cfg)
+    # One stream can only use one group at a time: achieved fraction of the
+    # FULL crossbar is ~1/num_groups (modulo burst overhead).
+    assert r["achieved_fraction"] < 2.0 / cfg.num_bank_groups
+    assert r["achieved_fraction"] > 0.5 / cfg.num_bank_groups
+
+
+def test_many_burst_streams_saturate():
+    cfg = CCMEMConfig(num_bank_groups=16)
+    streams = [AccessStream(words=1 << 16, kind="burst") for _ in range(16)]
+    r = simulate(streams, cfg)
+    # Sequential interleaves from many ports keep most groups busy.
+    assert r["achieved_fraction"] > 0.4
+
+
+def test_random_access_worse_than_burst():
+    cfg = CCMEMConfig(num_bank_groups=16)
+    burst = simulate([AccessStream(words=1 << 16, kind="burst")
+                      for _ in range(8)], cfg)
+    rand = simulate([AccessStream(words=1 << 16, kind="random")
+                     for _ in range(8)], cfg)
+    assert rand["achieved_fraction"] < burst["achieved_fraction"]
+
+
+def test_scld_bandwidth_semantics():
+    """Paper §3.2: compressed data is never *faster* than dense (same banks,
+    extra bits per word) — at 60% sparsity dense-rate is matched (decoder
+    cap), below ~33% it is strictly slower. The win is capacity."""
+    cfg = CCMEMConfig()
+    dense = simulate([AccessStream(words=1 << 20, kind="burst")], cfg)
+    s60 = simulate([AccessStream(words=1 << 20, kind="burst",
+                                 sparsity=0.6)], cfg)
+    s20 = simulate([AccessStream(words=1 << 20, kind="burst",
+                                 sparsity=0.2)], cfg)
+    assert s60["cycles"] <= dense["cycles"] * 1.01
+    # Below ~33% the controller stores dense (storage_factor == 1), so the
+    # read rate equals dense — never slower, never faster.
+    assert abs(s20["cycles"] - dense["cycles"]) < dense["cycles"] * 0.01
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 10_000))
+def test_cycles_monotone_in_streams(n_streams, seed):
+    cfg = CCMEMConfig(num_bank_groups=8)
+    streams = [AccessStream(words=1 << 12, kind="burst")
+               for _ in range(n_streams)]
+    r = simulate(streams, cfg, seed=seed)
+    assert r["cycles"] >= r["peak_cycles"] * 0.99
+    assert 0.0 < r["achieved_fraction"] <= 1.0
+
+
+def test_gemm_pattern_mostly_burst():
+    streams = ccmem.gemm_streams(128, 4096, 4096)
+    r = simulate(streams)
+    assert r["achieved_fraction"] > 0.01
+    # weight stream dominates words
+    assert streams[0].words > streams[1].words
+
+
+def test_decode_pattern_kv_dominated():
+    streams = ccmem.attention_decode_streams(32768, 4096, 8, 128)
+    assert streams[0].words > 100 * streams[1].words

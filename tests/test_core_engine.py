@@ -1,0 +1,150 @@
+"""Co-design engine tests: hardware model invariants, TCO calibration
+against the paper's Table 2, mapping-search properties, SCLD codec
+(hypothesis property tests on the system's invariants).
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import explore, hardware, perf, sparsity, tco
+from repro.core.workloads import PAPER_MODELS, LLMWorkload
+
+
+# ---------------------------------------------------------------------------
+# Hardware model
+# ---------------------------------------------------------------------------
+
+@given(st.floats(20.0, 800.0))
+def test_yield_in_unit_interval(die):
+    c = hardware.ChipConfig(die_mm2=die, sram_mb=10, tflops=1)
+    assert 0.0 < c.die_yield() <= 1.0
+
+
+@given(st.floats(20.0, 400.0), st.floats(20.1, 400.0))
+def test_bigger_die_costs_more_per_area(a, b):
+    small, big = sorted([a, b])
+    if big - small < 1:
+        return
+    # Silicon $/mm^2 (excluding the fixed per-die test cost) grows with die
+    # size: yield drops + rectangular packing loss — the paper's Fig 7 lever.
+    def si_cost_per_mm2(die):
+        c = hardware.ChipConfig(die_mm2=die, sram_mb=1, tflops=1)
+        return (hardware.WAFER_COST / c.dies_per_wafer()) / c.die_yield() / die
+
+    assert si_cost_per_mm2(big) >= si_cost_per_mm2(small) * 0.999
+
+
+def test_dies_per_wafer_sane():
+    c = hardware.ChipConfig(die_mm2=100, sram_mb=1, tflops=1)
+    # 300mm wafer area ~70,685 mm^2; with edge loss expect ~600 dies.
+    assert 450 <= c.dies_per_wafer() <= 707
+
+
+def test_sweep_respects_constraints():
+    servers = hardware.sweep_servers()
+    assert len(servers) > 500  # "tens of thousands" scaled to test time
+    for s in servers[::37]:
+        assert s.feasible()
+        assert s.power_per_lane <= hardware.MAX_POWER_PER_LANE_W
+        assert s.silicon_per_lane <= hardware.MAX_SILICON_PER_LANE_MM2
+        assert s.chip.used_area <= s.chip.die_mm2 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# TCO + calibration vs Table 2
+# ---------------------------------------------------------------------------
+
+def test_capex_dominates_tco():
+    """Paper §5.2: CapEx exceeds 80% of TCO for most designs."""
+    servers = hardware.sweep_servers()
+    fracs = [tco.server_tco(s).capex_fraction for s in servers[::17]]
+    assert np.median(fracs) > 0.6
+
+
+@pytest.mark.slow
+def test_gpt3_calibration_vs_table2():
+    servers = explore.phase1_servers()
+    res = explore.explore(PAPER_MODELS["gpt3-175b"], ctx=2048,
+                          servers=servers, keep_all=False)
+    row = res.best.table_row()
+    # Paper Table 2: die 140 mm^2, 225.8 MB, 5.50 TF, $0.161/1M tokens.
+    assert 60 <= row["die_mm2"] <= 300
+    assert 100 <= row["mb_per_chip"] <= 500
+    assert row["tco_per_mtoken"] < 0.161 * 3.0
+    assert row["tco_per_mtoken"] > 0.161 / 3.0
+
+
+def test_mapping_obeys_capacity():
+    wl = PAPER_MODELS["gpt2-1.5b"]
+    chip = hardware.ChipConfig(die_mm2=60, sram_mb=33, tflops=5.6)
+    server = hardware.ServerConfig(chip=chip, chips_per_lane=16)
+    dp = perf.best_mapping(server, wl, ctx=1024)
+    assert dp is not None
+    assert dp.perf.mem_per_chip_mb <= chip.sram_mb * 0.9 + 1e-6
+
+
+def test_pipeline_schedule_formula():
+    """l_token = max(l_mb, n*l_s): more microbatches only helps until n=p."""
+    wl = PAPER_MODELS["megatron-8.3b"]
+    chip = hardware.ChipConfig(die_mm2=40, sram_mb=27, tflops=2.87)
+    server = hardware.ServerConfig(chip=chip, chips_per_lane=18)
+    lat = {}
+    for n in (1, 2, 4, 8):
+        r = perf.evaluate(server, wl, 1024,
+                          perf.Mapping(tp=server.num_chips, pp=8, batch=8,
+                                       microbatches=n))
+        if r:
+            lat[n] = r.latency_per_token
+    assert lat, "no feasible mapping"
+    best_n = min(lat, key=lat.get)
+    assert best_n >= 4  # n close to p is optimal (paper Fig 9)
+
+
+# ---------------------------------------------------------------------------
+# SCLD sparsity model + codec
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.0, 0.95))
+def test_storage_factor_bounds(s):
+    f = sparsity.storage_factor(s)
+    assert 0.0 < f <= 1.0
+
+
+def test_storage_factor_sweet_spot():
+    # Below 1/3 sparsity the sparse encoding is bigger -> store dense (1.0).
+    assert sparsity.storage_factor(0.2) == 1.0
+    # 60% sparsity: 0.4*24/16 = 0.6 + index overhead.
+    assert 0.55 < sparsity.storage_factor(0.6) < 0.65
+    # Paper Fig 13: 1.7x larger model at 60% sparsity.
+    assert 1.55 < sparsity.max_model_scale(0.6) < 1.75
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3),
+       st.floats(0.0, 0.9), st.integers(0, 2 ** 31 - 1))
+def test_tile_csr_roundtrip(tr, tc, s, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((32 * tr, 8 * tc)).astype(np.float32)
+    w = sparsity.sparsify(w, s, seed)
+    t = sparsity.encode(w)
+    assert np.allclose(sparsity.decode(t), w)
+    # Stored bits never exceed dense-equivalent by more than index overhead.
+    dense_bits = w.size * 16
+    if s >= 0.5:
+        assert t.stored_bits() < dense_bits
+
+
+def test_sparse_tco_improvement():
+    """Paper Fig 13: ~7.4% TCO/token gain at 60% sparsity for OPT-175B."""
+    wl = PAPER_MODELS["gpt3-175b"]  # same shape as OPT-175B
+    chip = hardware.ChipConfig(die_mm2=140, sram_mb=226, tflops=5.5)
+    server = hardware.ServerConfig(chip=chip, chips_per_lane=17)
+    dense = perf.best_mapping(server, wl, ctx=2048)
+    import dataclasses
+    wl_sparse = dataclasses.replace(
+        wl, weight_storage_factor=sparsity.storage_factor(0.6))
+    sparse = perf.best_mapping(server, wl_sparse, ctx=2048)
+    assert dense and sparse
+    assert sparse.tco_per_mtoken < dense.tco_per_mtoken

@@ -1,0 +1,128 @@
+"""Per-kernel correctness: shape/dtype sweeps vs the pure-jnp oracles.
+
+All Pallas kernels run in interpret mode (CPU executes the kernel body), as
+specified for this CPU-only container; the BlockSpecs/grids are the TPU
+deployment artifacts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.flash_decode import flash_decode
+from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.sclad_matmul.sclad_matmul import (
+    block_compress, decompress, sclad_matmul)
+from repro.kernels.sclad_matmul.ref import sclad_matmul_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Sq,Sk,H,Hk,D,causal", [
+    (2, 256, 256, 4, 2, 64, True),
+    (1, 128, 384, 8, 8, 128, False),
+    (2, 256, 256, 4, 1, 64, True),   # MQA
+    (1, 512, 512, 2, 2, 128, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Sq, Sk, H, Hk, D, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hk, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hk, D)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Hk,D,S", [
+    (2, 8, 2, 64, 512), (1, 4, 4, 128, 256), (3, 8, 1, 64, 384)])
+@pytest.mark.parametrize("length", [1, 129, None])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode(B, H, Hk, D, S, length, dtype):
+    length = S if length is None else min(length, S)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, H, D)).astype(dtype)
+    kc = jax.random.normal(ks[1], (B, S, Hk, D)).astype(dtype)
+    vc = jax.random.normal(ks[2], (B, S, Hk, D)).astype(dtype)
+    out = flash_decode(q, kc, vc, jnp.int32(length), interpret=True)
+    ref = decode_ref(q, kc, vc, jnp.int32(length))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# SCLD matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,C", [
+    (128, 256, 128, 6), (256, 128, 256, 16), (128, 384, 256, 4),
+    (384, 128, 128, 1)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_sclad_matmul(M, K, N, C, dtype):
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((K, N)).astype(np.float32)
+    vals, rows = block_compress(w, C)
+    x = jnp.asarray(rng.standard_normal((M, K))).astype(dtype)
+    y = sclad_matmul(x, jnp.asarray(vals).astype(dtype),
+                     jnp.asarray(rows), interpret=True)
+    yr = sclad_matmul_ref(x, np.asarray(vals, np.float32), rows)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32),
+        atol=1e-1 if dtype == jnp.bfloat16 else 1e-4,
+        rtol=5e-2 if dtype == jnp.bfloat16 else 2e-2)
+
+
+def test_block_compress_roundtrip_full_capacity():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((256, 256)).astype(np.float32)
+    vals, rows = block_compress(w, 16)
+    assert np.allclose(decompress(vals, rows), w)
+
+
+def test_block_compress_keeps_largest_units():
+    w = np.zeros((128, 128), np.float32)
+    w[0:8] = 100.0  # unit 0 is the largest
+    w[64:72] = 50.0  # unit 8 second
+    vals, rows = block_compress(w, 2)
+    assert set(rows[0, 0].tolist()) == {0, 8}
+    assert np.allclose(decompress(vals, rows), w)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("BH,S,P,N,chunk", [
+    (4, 256, 64, 32, 64), (2, 128, 32, 16, 128), (1, 512, 64, 64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(BH, S, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    xdt = (jax.random.normal(ks[0], (BH, S, P)) * 0.1).astype(dtype)
+    a = (-jnp.abs(jax.random.normal(ks[1], (BH, S))) * 0.1).astype(dtype)
+    b = (jax.random.normal(ks[2], (BH, S, N)) * 0.3).astype(dtype)
+    c = (jax.random.normal(ks[3], (BH, S, N)) * 0.3).astype(dtype)
+    y, st = ssd_scan(xdt, a, b, c, chunk=chunk, interpret=True)
+    yr, str_ = ssd_scan_ref(xdt, a, b, c)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(yr, np.float32),
+        atol=tol(dtype) * 5, rtol=tol(dtype) * 5)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                               atol=tol(dtype) * 5, rtol=tol(dtype) * 5)

@@ -1,0 +1,138 @@
+"""Sharding rules: spec/tree alignment, divisibility sanitation (property
+tests), serve-vs-train layouts, roofline HLO parsing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config, list_archs
+from repro.core import roofline
+from repro.launch import specs as specs_lib
+from repro.models import model as M
+from repro.parallel import sharding
+
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    class devices:
+        shape = (16, 16)
+
+
+def setup_module(_m=None):
+    sharding.set_mesh_axis_sizes(FakeMesh())
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("mode", ["train", "serve"])
+def test_param_specs_cover_tree(arch, mode):
+    cfg = get_config(arch)
+    pshape = M.param_specs(cfg)
+    spec = sharding.param_specs(cfg, pshape, mode=mode)
+    spec = sharding.sanitize_specs(spec, pshape)
+    flat_s = jax.tree.leaves(spec, is_leaf=lambda x: isinstance(x, P))
+    flat_p = jax.tree.leaves(pshape)
+    assert len(flat_s) == len(flat_p)
+    for s, p in zip(flat_s, flat_p):
+        assert isinstance(s, P)
+        assert len(s) <= len(p.shape)
+        # Post-sanitation: every sharded dim divides evenly.
+        for i, axes in enumerate(s):
+            if axes is None:
+                continue
+            axes_t = axes if isinstance(axes, tuple) else (axes,)
+            size = int(np.prod([dict(data=16, model=16, pod=2).get(a, 1)
+                                for a in axes_t]))
+            assert p.shape[i] % size == 0, (s, p.shape)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 200), min_size=1, max_size=4),
+       st.integers(0, 2))
+def test_sanitize_never_leaves_undivisible(dims, which):
+    spec = P(*["data" if i == which else None for i in range(len(dims))])
+    leaf = jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+    out = sharding.sanitize_specs(spec, leaf)
+    for i, axes in enumerate(out):
+        if axes is not None:
+            assert dims[i] % 16 == 0
+
+
+def test_serve_mode_drops_fsdp():
+    cfg = get_config("tinyllama-1.1b")
+    pshape = M.param_specs(cfg)
+    train = sharding.param_specs(cfg, pshape, mode="train")
+    serve = sharding.param_specs(cfg, pshape, mode="serve")
+    # wq: train has both axes, serve only model.
+    assert train["blocks"]["attn"]["wq"] == P(None, "data", "model")
+    assert serve["blocks"]["attn"]["wq"] == P(None, None, "model")
+
+
+def test_moe_expert_layout_is_ep_x_tp():
+    # EP over data, TP over the d_model dim (matches apply_moe_manual's
+    # d-sliced all-to-all payloads).
+    cfg = get_config("qwen3-moe-235b-a22b")
+    pshape = M.param_specs(cfg)
+    for mode in ("train", "serve"):
+        spec = sharding.param_specs(cfg, pshape, mode=mode)
+        assert spec["blocks"]["moe"]["w_gate"] == P(None, "data", "model",
+                                                    None)
+        assert spec["blocks"]["moe"]["w_down"] == P(None, "data", None,
+                                                    "model")
+
+
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                        "decode_32k"])
+def test_input_specs_shapes(shape_name):
+    cfg = get_config("tinyllama-1.1b")
+    ins = specs_lib.input_specs(cfg, shape_name)
+    assert "params" in ins
+    if shape_name == "train_4k":
+        assert ins["batch"]["tokens"].shape == (256, 4096)
+        assert ins["batch"]["labels"].shape == (256, 4096)
+    elif shape_name == "prefill_32k":
+        assert ins["batch"]["tokens"].shape == (32, 32768)
+    else:
+        assert ins["tokens"].shape == (128, 1)
+        assert ins["cache"]["k"].shape[2] == 32768
+
+
+# ---------------------------------------------------------------------------
+# Roofline HLO parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_collectives_synthetic():
+    hlo = """
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256]
+  %ag = bf16[256,64]{1,0} all-gather(%y), replica_groups={{0,1,2,3}}
+  %cp = f32[8]{0} collective-permute(%z)
+  %other = f32[4]{0} add(%a, %b)
+"""
+    stats = roofline.parse_collectives(hlo, total_devices=256)
+    assert set(stats.by_op) == {"all-reduce", "all-gather",
+                                "collective-permute"}
+    ar = stats.by_op["all-reduce"]
+    assert ar[1] == 16 * 128 * 4  # result bytes
+    # ring all-reduce wire factor 2*(g-1)/g with g=16
+    assert np.isclose(ar[2], 16 * 128 * 4 * 2 * 15 / 16 * 256)
+    ag = stats.by_op["all-gather"]
+    assert ag[1] == 256 * 64 * 2
+    assert np.isclose(ag[2], 256 * 64 * 2 * 3 / 4 * 256)
+
+
+def test_roofline_terms_bottleneck():
+    t = roofline.RooflineTerms(flops=197e12 * 256, bytes_hbm=0.0,
+                               wire_bytes=0.0, chips=256)
+    assert np.isclose(t.t_compute, 1.0)
+    assert t.bottleneck == "compute"
+    t2 = roofline.RooflineTerms(flops=0, bytes_hbm=819e9 * 256 * 2,
+                                wire_bytes=0, chips=256)
+    assert t2.bottleneck == "memory" and np.isclose(t2.t_memory, 2.0)
+
+
+@given(st.floats(1, 1e18), st.floats(1, 1e18), st.floats(1, 1e18))
+def test_roofline_bound_is_max(f, b, w):
+    t = roofline.RooflineTerms(flops=f, bytes_hbm=b, wire_bytes=w, chips=256)
+    assert np.isclose(t.t_bound,
+                      max(t.t_compute, t.t_memory, t.t_collective))

@@ -1,0 +1,133 @@
+"""End-to-end behaviour tests: per-arch smoke (reduced configs) + training.
+
+Covers the assigned-architecture deliverable: every arch instantiates a
+reduced same-family config, runs one forward and one train step on CPU, and
+asserts output shapes + finiteness; decode agrees with the full-sequence
+oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, get_config, list_archs
+from repro.models import model as M
+from repro.launch import steps as steps_lib
+from repro.training import optimizer as opt_lib
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, B, S, key=0, labels=False):
+    toks = jax.random.randint(jax.random.PRNGKey(key), (B, S + 1), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    if labels:
+        batch["labels"] = toks[:, 1:S + 1]
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(key + 1),
+            (B, cfg.num_patches, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(key + 2),
+            (B, cfg.encdec.encoder_seq_len, cfg.d_model)).astype(jnp.bfloat16)
+    return batch, toks
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch, _ = make_batch(cfg, B, S)
+    logits, aux = M.forward(cfg, params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt_lib.init(params)
+    step = jax.jit(steps_lib.make_train_step(cfg))
+    batch, _ = make_batch(cfg, 2, 16, labels=True)
+    params2, opt2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # Parameters actually moved.
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+    assert int(opt2.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward_oracle(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch, toks = make_batch(cfg, B, S)
+    full = dict(batch, tokens=toks[:, :S + 1])
+    logits_full, _ = M.forward(cfg, params, full)
+    _, cache = M.prefill(cfg, params, batch, max_len=32)
+    logits_dec, _ = M.decode_step(cfg, params, cache, toks[:, S:S + 1],
+                                  jnp.int32(S))
+    got = np.asarray(logits_dec[:, 0], np.float32)
+    want = np.asarray(logits_full[:, S], np.float32)
+    scale = np.max(np.abs(want)) + 1e-9
+    # SSM families accumulate differently in the chunked vs step form (bf16).
+    tol = 0.05 if cfg.family in ("ssm", "hybrid") else 1e-2
+    assert np.max(np.abs(got - want)) / scale < tol
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_cache_extends(arch):
+    """Two decode steps after prefill: cache layout stays consistent."""
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    batch, toks = make_batch(cfg, B, S)
+    _, cache = M.prefill(cfg, params, batch, max_len=16)
+    l1, cache = M.decode_step(cfg, params, cache, toks[:, S:S + 1],
+                              jnp.int32(S))
+    l2, cache = M.decode_step(cfg, params, cache,
+                              jnp.argmax(l1, -1).astype(jnp.int32),
+                              jnp.int32(S + 1))
+    assert l2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(l2.astype(jnp.float32))))
+
+
+def test_loss_decreases_tinyllama():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt_lib.init(params)
+    step = jax.jit(steps_lib.make_train_step(
+        cfg, opt_lib.AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=30)))
+    batch, _ = make_batch(cfg, 4, 32, labels=True)
+    losses = []
+    for _ in range(12):  # same batch -> loss must fall
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_shape_grid_definition():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].kind == "decode"
+    assert SHAPES["long_500k"].seq_len == 524288
+    # long_500k runs only for sub-quadratic archs.
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        ok, why = cfg.shape_supported("long_500k")
+        assert ok == cfg.sub_quadratic, (arch, why)
