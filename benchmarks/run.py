@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.fig15_nre",
     "benchmarks.roofline",
     "benchmarks.kernels_bench",
+    "benchmarks.serving_bench",
 ]
 
 

@@ -39,15 +39,26 @@ def main():
     print(f"forward: logits {logits.shape}, "
           f"finite={bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))}")
 
-    # 2. Generate a few tokens through the serving engine.
+    # 2. Generate through the continuous-batching serving engine: submit
+    # requests with different prompt AND completion lengths, then step the
+    # scheduler — each step() admits queued work into free KV-cache slots
+    # and runs one jitted masked decode across all slots.
     eng = ServingEngine(cfg, params, max_batch=2, max_len=48, eos_id=-1,
                         sampler=SamplerConfig(temperature=0.7, top_k=20))
     eng.submit(np.arange(1, 9), max_new_tokens=8)
-    eng.submit(np.arange(5, 13), max_new_tokens=8)
-    out = eng.run()
-    for uid, toks in out.items():
+    eng.submit(np.arange(5, 18), max_new_tokens=5)
+    eng.submit(np.arange(2, 8), max_new_tokens=6)  # waits for a freed slot
+    done = {}
+    if eng.mode == "continuous":
+        while len(done) < 3:
+            for uid, toks in eng.step():
+                done[uid] = toks
+    else:  # ssm/hybrid/audio fall back to lockstep wave batching
+        done = eng.run()
+    for uid, toks in sorted(done.items()):
         print(f"generated[{uid}]: {toks}")
-    print(f"decode throughput: {eng.stats.tokens_per_s:.1f} tok/s (CPU)")
+    print(f"decode throughput: {eng.stats.tokens_per_s:.1f} tok/s, "
+          f"slot occupancy {eng.stats.slot_occupancy:.0%} (CPU)")
 
 
 if __name__ == "__main__":

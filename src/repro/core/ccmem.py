@@ -88,6 +88,7 @@ def simulate(streams: Sequence[AccessStream], cfg: CCMEMConfig = CCMEMConfig(),
     ptrs = [0] * len(streams)
     cycles = cfg.crossbar_latency_cycles
     served_words = 0.0
+    remaining = [float(s.words) for s in streams]
     total_words = float(sum(s.words for s in streams))
 
     def burst_cycles(s: AccessStream) -> float:
@@ -115,7 +116,12 @@ def simulate(streams: Sequence[AccessStream], cfg: CCMEMConfig = CCMEMConfig(),
         for i in winners:
             c, burst = burst_cycles(streams[i])
             round_cost = max(round_cost, c)
-            served_words += min(burst, streams[i].words)
+            # The final burst of a stream is short: credit only the words
+            # actually remaining, so served_words can never exceed
+            # total_words.
+            served = min(float(burst), remaining[i])
+            served_words += served
+            remaining[i] -= served
             ptrs[i] += 1
         cycles += round_cost
         active = [i for i in active if ptrs[i] < len(seqs[i])]

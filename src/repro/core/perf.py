@@ -119,7 +119,10 @@ def evaluate_grid(server: ServerConfig, wl: LLMWorkload, ctx: int,
     # Attention: read this layer's KV for every row of the microbatch.
     kv_layer_row = ctx * wl.kv_bytes_per_token(BYTES_PER_KV) / L
     t_attn_mem = (m_tok * kv_layer_row / tp) / chip.mem_bw
-    attn_flops = 4.0 * m_tok * ctx * wl.d_model / 2.0  # avg ctx/2 causal
+    # A decode step attends over the FULL KV prefix (ctx keys); the causal
+    # ctx/2 average only applies to prefill, which this generate-stage model
+    # does not price.  2 MACs x (QK^T + PV) = 4 flops per key per d_model.
+    attn_flops = 4.0 * m_tok * ctx * wl.d_model
     t_attn_compute = attn_flops / (tp * chip.tflops * 1e12 * util)
 
     # Tensor-parallel all-reduce (2 per layer). Link bw: slowest in group.

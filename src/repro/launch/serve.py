@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "continuous", "wave"],
+                    help="scheduler: continuous batching (attention "
+                         "families) or the lockstep wave baseline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -33,7 +37,7 @@ def main():
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch,
-        max_len=64 + args.max_new,
+        max_len=64 + args.max_new, mode=args.mode, seed=args.seed,
         sampler=SamplerConfig(temperature=args.temperature, top_k=50))
 
     rng = np.random.default_rng(args.seed)
@@ -47,7 +51,8 @@ def main():
     s = engine.stats
     print(f"prefill {s.prefill_tokens} tok in {s.prefill_s:.2f}s; "
           f"generated {s.generated_tokens} tok in {s.decode_s:.2f}s "
-          f"({s.tokens_per_s:.1f} tok/s)")
+          f"({s.tokens_per_s:.1f} tok/s, mode={engine.mode}, "
+          f"slot occupancy {s.slot_occupancy:.0%})")
 
 
 if __name__ == "__main__":

@@ -269,20 +269,24 @@ def attention_decode(
 ):
     """Single-token decode with in-place cache update.
 
-    x: (B, 1, d); k_cache/v_cache: (B, S_max, Hk, D); position: scalar int.
+    x: (B, 1, d); k_cache/v_cache: (B, S_max, Hk, D); position: scalar int
+    OR a per-row (B,) int vector — rows of a batch may sit at different
+    sequence offsets (continuous batching).  The new K/V is scattered into
+    each row's own cache index and the attention mask is per-row.
     Returns (out (B,1,d), k_cache, v_cache).
     """
     B = x.shape[0]
     S_max = k_cache.shape[1]
     q, k, v = _project_qkv(cfg, p, x, x)
+    pos = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (B,))
     if use_rope:
-        pos = jnp.full((B, 1), position, jnp.int32)
-        q = apply_rope(cfg, q, pos)
-        k = apply_rope(cfg, k, pos)
-    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, position, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, position, 0, 0))
-    # Mask out positions beyond the current one.
-    valid = (jnp.arange(S_max) <= position)[None, None, None, None, :]
+        q = apply_rope(cfg, q, pos[:, None])
+        k = apply_rope(cfg, k, pos[:, None])
+    rows = jnp.arange(B)
+    k_cache = k_cache.at[rows, pos].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[rows, pos].set(v[:, 0].astype(v_cache.dtype))
+    # Mask out positions beyond each row's current one.
+    valid = (jnp.arange(S_max)[None] <= pos[:, None])[:, None, None, None, :]
     out = _sdpa(cfg, q, k_cache.astype(x.dtype), v_cache.astype(x.dtype), valid)
     return out @ p["wo"], k_cache, v_cache
 

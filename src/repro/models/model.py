@@ -371,11 +371,134 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
 
 
+def reset_slot(cache: Params, slot) -> Params:
+    """Zero batch row(s) ``slot`` of an attention-family KV cache.
+
+    ``slot`` is an int or int array of batch indices.  Works on any cache
+    whose leaves are (L, B, ...) arrays (dense/moe/vlm/audio).  SSM and
+    hybrid caches nest per-group state with a different batch-dim placement
+    and are not slot-addressable; continuous batching does not serve them.
+    """
+    return jax.tree.map(
+        lambda x: x.at[:, slot].set(jnp.zeros((), x.dtype)), cache)
+
+
+def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
+                  tokens: jnp.ndarray, lengths: jnp.ndarray,
+                  slots: jnp.ndarray,
+                  patch_embeds: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Params]:
+    """Prefill left-padded prompts into specific KV-cache slots.
+
+    The continuous-batching admission path: a group of queued requests with
+    *different* prompt lengths is left-padded to a common bucket length and
+    prefilled in one call, each request writing its K/V into its own cache
+    slot at its own offset.
+
+    tokens:  (Bn, P) int32, each row LEFT-padded to P;
+    lengths: (Bn,) true prompt lengths (<= P);
+    slots:   (Bn,) batch rows of ``cache`` to fill;
+    patch_embeds: (Bn, num_patches, d) for the vlm family (zeros if None).
+
+    Pad positions are masked out of the attention (so dense/vlm results are
+    bit-identical to unpadded single-request prefill; for moe, co-admitted
+    requests share expert-capacity buffers, so under *tight* capacity
+    factors drops — and therefore logits — can differ from the solo run)
+    and pad RoPE phases are clipped to zero.  After the layer scan each row's token K/V is
+    rolled left-compact, so the slot layout is ``[patches | prompt | junk]``
+    with the junk tail strictly above the row's ``pos`` pointer — dead under
+    the per-row decode mask and progressively overwritten by decode writes.
+
+    Families: dense / moe / vlm (attention KV caches).  MoE blocks receive
+    the real-token mask as routing validity, so pad tokens consume no
+    expert capacity and cannot displace live tokens.
+    Returns (last-real-token logits (Bn, vocab), updated cache).
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"prefill_slots supports attention KV caches, not family {fam!r}")
+    Bn, P = tokens.shape
+    pad = (P - lengths).astype(jnp.int32)  # (Bn,)
+    h = params["embed"][tokens]
+    prefix = 0
+    if fam == "vlm":
+        if patch_embeds is None:
+            patch_embeds = jnp.zeros((Bn, cfg.num_patches, cfg.d_model),
+                                     DTYPE)
+        patches = patch_embeds @ params["patch_proj"]
+        h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)
+        prefix = cfg.num_patches
+    S = prefix + P
+
+    tok_pos = prefix + jnp.maximum(jnp.arange(P)[None] - pad[:, None], 0)
+    if prefix:
+        positions = jnp.concatenate(
+            [jnp.broadcast_to(jnp.arange(prefix)[None], (Bn, prefix)),
+             tok_pos], axis=1)
+    else:
+        positions = tok_pos  # (Bn, S)
+
+    # Key j is visible to query i iff causal AND j is not a pad slot.
+    sidx = jnp.arange(S)
+    real_key = (sidx[None] < prefix) | (sidx[None] >= prefix + pad[:, None])
+    mask = (sidx[None, None, :] <= sidx[None, :, None]) \
+        & real_key[:, None, :]  # (Bn, S, S)
+    mask5 = mask[:, None, None]  # broadcast to (Bn, Hk, rep, S, S)
+    kvd = kv_store_dtype(cfg)
+
+    def body(x, blk):
+        xn = layers.apply_norm(cfg, blk["ln_attn"], x)
+        q, k, v = layers._project_qkv(cfg, blk["attn"], xn, xn)
+        q = layers.apply_rope(cfg, q, positions)
+        k = layers.apply_rope(cfg, k, positions)
+        a = layers._sdpa(cfg, q, k, v, mask5)
+        x = x + a @ blk["attn"]["wo"]
+        if fam == "moe":
+            y, _ = moe_lib.apply_moe(
+                cfg, blk["moe"], layers.apply_norm(cfg, blk["ln_mlp"], x),
+                valid=real_key)
+            x = x + y
+        else:
+            x = x + layers.apply_mlp(
+                cfg, blk["mlp"], layers.apply_norm(cfg, blk["ln_mlp"], x))
+        return x, (k.astype(kvd), v.astype(kvd))
+
+    h, (ks, vs) = jax.lax.scan(body, h, params["blocks"])
+
+    # Left-compact each row's token K/V: real tokens to offsets 0..len-1.
+    roll_idx = (jnp.arange(P)[None] + pad[:, None]) % P  # (Bn, P)
+    ctx = cache["k"].shape[2]
+
+    def fit(kv):  # (L, Bn, S, hk, hd) -> (L, Bn, ctx, hk, hd)
+        head, tail = kv[:, :, :prefix], kv[:, :, prefix:]
+        tail = jnp.take_along_axis(
+            tail, roll_idx[None, :, :, None, None], axis=2)
+        kv = jnp.concatenate([head, tail], axis=2) if prefix else tail
+        return jnp.pad(kv, ((0, 0), (0, 0), (0, ctx - S), (0, 0), (0, 0)))
+
+    cache = dict(cache,
+                 k=cache["k"].at[:, slots].set(fit(ks)),
+                 v=cache["v"].at[:, slots].set(fit(vs)))
+    # Left padding aligns every row's last REAL token at index S-1.
+    logits = unembed(cfg, params, h[:, -1])
+    return logits, cache
+
+
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
-                tokens: jnp.ndarray, position: jnp.ndarray
+                tokens: jnp.ndarray, position: jnp.ndarray,
+                active: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Params]:
-    """One autoregressive step. tokens: (B, 1); position: scalar int32
-    (index of the new token within the cache context).
+    """One autoregressive step. tokens: (B, 1); position: scalar int32 OR a
+    per-row (B,) int32 vector (index of each row's new token within the
+    cache context — continuous batching runs rows at different offsets).
+    Vector positions are supported for the dense/moe/vlm/ssm/hybrid
+    families; audio requires a scalar.
+
+    active: optional (B,) bool — rows marked False are dead lanes (retired
+    serving slots).  For the moe family they are excluded from expert
+    capacity so they cannot displace live rows' tokens; other families
+    ignore the mask (dead lanes are already masked out by position).
 
     Returns (logits (B, 1, vocab), updated cache).
     """
@@ -394,7 +517,8 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
             x = x + a
             if fam == "moe":
                 y, _ = moe_lib.apply_moe(
-                    cfg, blk["moe"], layers.apply_norm(cfg, blk["ln_mlp"], x))
+                    cfg, blk["moe"], layers.apply_norm(cfg, blk["ln_mlp"], x),
+                    valid=None if active is None else active[:, None])
                 x = x + y
             else:
                 x = x + layers.apply_mlp(

@@ -73,10 +73,14 @@ def _num_groups(B: int, S: int) -> int:
     return 1
 
 
-def _dispatch_indices(cfg: ModelConfig, experts: jnp.ndarray, C: int):
+def _dispatch_indices(cfg: ModelConfig, experts: jnp.ndarray, C: int,
+                      valid: jnp.ndarray = None):
     """Assign each (group, token, k) a slot in its expert capacity buffer.
 
-    experts: (G, T, k) int32.  Returns (slot (G,T,k) in [0,C] (C = dropped),
+    experts: (G, T, k) int32.  valid: optional (G, T) bool — tokens marked
+    False (pad tokens, retired continuous-batching lanes) are routed to the
+    drop bin and consume NO expert capacity, so they cannot displace live
+    tokens.  Returns (slot (G,T,k) in [0,C] (C = dropped),
     buf_tok (G, E, C) int32 index into tokens of that group, T = empty).
     """
     m = cfg.moe
@@ -85,9 +89,14 @@ def _dispatch_indices(cfg: ModelConfig, experts: jnp.ndarray, C: int):
     flat_e = experts.reshape(G, T * k)  # token-major, k-minor
     # FIFO position of each assignment within its expert — local cumsum.
     one_hot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (G, T*k, E)
+    if valid is not None:
+        flat_v = jnp.repeat(valid, k, axis=1)  # token-major matches flat_e
+        one_hot = one_hot * flat_v[..., None].astype(jnp.int32)
     pos_in_e = jnp.cumsum(one_hot, axis=1) - 1
     slot = jnp.take_along_axis(pos_in_e, flat_e[..., None], axis=2)[..., 0]
     slot_c = jnp.where(slot < C, slot, C)  # dropped -> sentinel C
+    if valid is not None:
+        slot_c = jnp.where(flat_v, slot_c, C)  # dead -> drop bin
     # Scatter token ids into (G, E, C+1); column C is the drop bin.
     buf = jnp.full((G, E, C + 1), T, jnp.int32)
     g_idx = jnp.arange(G, dtype=jnp.int32)[:, None]
@@ -97,11 +106,19 @@ def _dispatch_indices(cfg: ModelConfig, experts: jnp.ndarray, C: int):
     return slot_c.reshape(G, T, k), buf[:, :, :C]
 
 
-def apply_moe(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, d) -> (out (B, S, d), aux_loss)."""
+def apply_moe(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+              valid: jnp.ndarray = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss).
+
+    valid: optional (B, S) bool — False tokens (pads, retired serving
+    slots) consume no expert capacity and get zero expert output (the
+    shared expert still runs on them; their output is dead anyway).
+    Only the auto-partitioned path supports it — the manual-collective
+    path is skipped when a mask is given.
+    """
     m = cfg.moe
     B, S, d = x.shape
-    if manual_path_available(cfg, B * S):
+    if valid is None and manual_path_available(cfg, B * S):
         return apply_moe_manual(cfg, p, x)
     E = m.num_experts
     G = _num_groups(B, S)
@@ -112,7 +129,9 @@ def apply_moe(cfg: ModelConfig, p: Params, x: jnp.ndarray) -> Tuple[jnp.ndarray,
     weights, experts, aux = route(cfg, p["router"], xt.reshape(G * T, d))
     weights = weights.reshape(G, T, -1)
     experts = experts.reshape(G, T, -1)
-    slot, buf_tok = _dispatch_indices(cfg, experts, C)
+    slot, buf_tok = _dispatch_indices(
+        cfg, experts, C,
+        valid.reshape(G, T) if valid is not None else None)
 
     # Gather tokens into per-expert buffers: (G, E, C, d).  Clip+mask instead
     # of a sentinel pad row: padding (T+1) would break the GSPMD tiling of the
@@ -216,14 +235,14 @@ def manual_path_available(cfg: ModelConfig, T: int) -> bool:
 
 def apply_moe_manual(cfg: ModelConfig, p: Params, x: jnp.ndarray):
     """x: (B, S, d) -> (out, aux). Requires manual_path_available()."""
-    from jax.sharding import get_abstract_mesh
+    from repro.parallel import sharding as _sh_compat
 
     m = cfg.moe
     B, S, d = x.shape
     T = B * S
     E = m.num_experts
     ep, ep_n, tp, tp_n = _manual_axes()
-    mesh = get_abstract_mesh()
+    mesh = _sh_compat.current_mesh()
     T_loc = T // ep_n
     C = capacity(cfg, T_loc)
     E_loc = E // ep_n
@@ -301,7 +320,7 @@ def apply_moe_manual(cfg: ModelConfig, p: Params, x: jnp.ndarray):
         return y, aux
 
     P_ = _P
-    fn = jax.shard_map(
+    fn = _sh_compat.shard_map(
         local, mesh=mesh,
         in_specs=(P_(ep, tp), P_(None, None),
                   P_(ep, tp, None), P_(ep, tp, None), P_(ep, None, tp)),

@@ -72,7 +72,8 @@ def pipeline_apply(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
         # Every stage holds zeros except the last: reduce to broadcast.
         return jax.lax.psum(out, axis)
 
-    fn = jax.shard_map(
+    from repro.parallel import sharding as _sh
+    fn = _sh.shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P())

@@ -1,19 +1,50 @@
-"""Serving engine: prefill + autoregressive decode with wave batching.
+"""Serving engine: continuous batching over a slot-based KV cache.
 
 The engine prices exactly what the paper's TCO/token metric prices: the
-generate stage.  Requests are grouped into fixed-size waves (the analytic
-engine's chosen batch size); each wave shares a KV cache allocation and
-decodes in lockstep, with per-row early-exit masking on EOS.
+generate stage under heavy multi-tenant load.  The seed's wave batcher
+(lockstep waves, bucketed by exact prompt length, host sync per token)
+modeled exactly the utilization losses the paper's batching/pipelining
+analysis (§4.2, Fig 6/8) says to avoid; this engine replaces it with
+Orca/vLLM-style iteration-level scheduling:
 
-On a real mesh the engine jits ``prefill`` / ``decode_step`` with the serve
-shardings from ``parallel.sharding``; on CPU smoke runs it executes the same
-code on one device.
+  * the KV cache is allocated ONCE as (L, max_batch, ctx, Hk, hd); each
+    batch row is a *slot* owned by at most one in-flight request, with a
+    per-row ``pos`` pointer so rows decode at different sequence offsets;
+  * admission: queued requests (any mix of prompt lengths) are LEFT-padded
+    to a power-of-two bucket and prefilled together through a masked
+    prefill (``model.prefill_slots``) that writes each prompt's K/V into a
+    freed slot at its own offset — no bucket-by-exact-length restriction;
+  * decode: one fully jitted masked step carries
+    ``(cache, last_logits, pos[B], active[B], budget[B], rng)`` with donated
+    buffers; sampling runs inside the jit (``serving.sampler.sample`` with a
+    per-row active mask, so finished slots are no-ops) and EOS/budget
+    retirement is computed on-device — the hot loop is one dispatch plus one
+    token-sized device->host read per generated token;
+  * scheduling: slots freed by EOS or ``max_new_tokens`` are refilled from
+    the queue between decode iterations (stale K/V needs no zeroing — it is
+    dead under the per-row mask and admission overwrites the whole slot
+    row; ``model.reset_slot`` exists for callers that want a clean cache).
+
+Families with attention KV caches (dense, moe, vlm) run this continuous
+path.  SSM/hybrid/audio recurrent state cannot be left-pad-masked without
+polluting the scan state, so those families fall back to the seed's wave
+batching; ``mode="wave"`` forces that path for any family (it is the
+baseline in ``benchmarks/serving_bench.py``).
+
+On a multi-device mesh, pass ``mesh=``: parameters and the cache are placed
+with the serve shardings from ``parallel.sharding`` (mode="serve": resident
+TP weights, batch-sharded / sequence-split KV) and the jitted functions
+inherit that placement.  Caveat: this sets the sharding module's
+process-global axis sizes (they must be visible when the jits trace), so
+one serving mesh per process — restore via ``set_mesh_axis_sizes`` if the
+process later runs un-meshed work.  On CPU smoke runs the same code
+executes on one device.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +52,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.parallel import sharding
 from repro.serving.sampler import SamplerConfig, sample
+
+# Families whose KV cache supports slot-level admission (see module doc).
+CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclass
@@ -39,44 +74,243 @@ class EngineStats:
     generated_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    decode_steps: int = 0
+    admissions: int = 0
+    # Occupancy: active slots summed over decode steps vs. capacity.
+    occupied_slot_steps: int = 0
+    slot_steps: int = 0
 
     @property
     def tokens_per_s(self) -> float:
         return self.generated_tokens / max(self.decode_s, 1e-9)
 
+    @property
+    def slot_occupancy(self) -> float:
+        return self.occupied_slot_steps / max(self.slot_steps, 1)
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Smallest power-of-two >= n (min 8), capped at the cache capacity."""
+    p = 8
+    while p < n:
+        p *= 2
+    return min(p, cap)
+
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
                  max_len: int = 256, eos_id: int = 0,
-                 sampler: Optional[SamplerConfig] = None):
+                 sampler: Optional[SamplerConfig] = None,
+                 mode: str = "auto", pad_id: int = 0, seed: int = 0,
+                 mesh=None):
+        """mode: "auto" (continuous where the family supports it),
+        "continuous" (error if unsupported) or "wave" (force the legacy
+        lockstep baseline)."""
         self.cfg = cfg
-        self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
+        self.pad_id = pad_id
         self.sampler = sampler or SamplerConfig()
         self.stats = EngineStats()
-        self._prefill = jax.jit(
-            lambda p, b: M.prefill(cfg, p, b, max_len),
-        )
-        self._decode = jax.jit(
-            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
         self._queue: List[Request] = []
         self._uid = 0
 
+        if mode == "auto":
+            mode = "continuous" if cfg.family in CONTINUOUS_FAMILIES \
+                else "wave"
+        if mode == "continuous" and cfg.family not in CONTINUOUS_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family!r} has no slot-addressable KV cache; "
+                f"use mode='wave'")
+        self.mode = mode
+
+        self.params = params
+        self._mesh = mesh
+        if mesh is not None:
+            self.params = self._place_serve(mesh, params)
+
+        # CPU backend has no buffer donation; skip it to avoid warnings.
+        donate = jax.default_backend() != "cpu"
+
+        # Legacy wave path (also the fallback for recurrent-state families).
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(cfg, p, b, max_len))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+
+        if self.mode == "continuous":
+            self._init_continuous(donate, seed)
+
     # -- public API ----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if max_new_tokens < 1:
+            # The wave path would silently emit nothing while the slot
+            # scheduler always decodes once: reject uniformly instead.
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(prompt) >= self.max_len:
+            # Same bound in both modes: wave prefill would otherwise fail
+            # deep in cache padding (or silently emit nothing at exactly
+            # max_len).
+            raise ValueError(
+                f"prompt length {len(prompt)} leaves no decode room in a "
+                f"{self.max_len}-token cache")
         self._uid += 1
-        self._queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                   max_new_tokens))
+        self._queue.append(Request(self._uid, prompt, max_new_tokens))
         return self._uid
 
-    def run(self) -> Dict[int, List[int]]:
-        """Drain the queue in waves; returns uid -> generated tokens.
+    def step(self) -> List[Tuple[int, List[int]]]:
+        """One scheduler iteration: admit queued requests into free slots,
+        then run one jitted masked decode step across all slots.
 
-        Requests are bucketed by prompt length so waves need no padding
-        (padding would let real tokens attend to pads).
+        Returns the requests finished this iteration as (uid, tokens).
         """
+        if self.mode != "continuous":
+            raise RuntimeError(
+                f"step() requires mode='continuous' (engine is in "
+                f"{self.mode!r} mode); use run()")
+        self._admit()
+        if not self._host_active.any():
+            return []
+
+        t0 = time.perf_counter()
+        (self._cache, self._logits, self._pos, self._active, self._budget,
+         host_out, self._key) = self._decode_fn(
+            self.params, self._cache, self._logits, self._pos, self._active,
+            self._budget, self._key)
+        host = np.asarray(host_out)  # the per-token host sync point
+        tok_h, active_h = host[0], host[1].astype(bool)
+        self.stats.decode_s += time.perf_counter() - t0
+
+        was = self._host_active
+        self.stats.decode_steps += 1
+        self.stats.occupied_slot_steps += int(was.sum())
+        self.stats.slot_steps += self.max_batch
+
+        finished: List[Tuple[int, List[int]]] = []
+        for i in np.nonzero(was)[0]:
+            r = self._slot_req[i]
+            r.output.append(int(tok_h[i]))
+            self.stats.generated_tokens += 1
+            if not active_h[i]:
+                r.done = True
+                finished.append((r.uid, r.output))
+                self._slot_req[i] = None
+        # Freed slots are NOT zeroed here: stale K/V is dead under the
+        # per-row mask and admission overwrites the full slot row, while a
+        # reset would copy the whole cache on donation-less backends.
+        # model.reset_slot exists for callers that need a clean cache.
+        self._host_active = active_h
+        return finished
+
+    def run(self) -> Dict[int, List[int]]:
+        """Drain the queue; returns uid -> generated tokens."""
+        if self.mode != "continuous":
+            return self._run_waves()
+        results: Dict[int, List[int]] = {}
+        while self._queue or self._host_active.any():
+            for uid, toks in self.step():
+                results[uid] = toks
+        return results
+
+    # -- continuous internals ------------------------------------------------
+    def _init_continuous(self, donate: bool, seed: int) -> None:
+        cfg, B = self.cfg, self.max_batch
+        self._cache = M.init_cache(cfg, B, self.max_len)
+        if self._mesh is not None:
+            self._cache = self._place_cache(self._mesh, self._cache)
+        ldtype = self.params["embed"].dtype
+        self._logits = jnp.zeros((B, cfg.vocab_size), ldtype)
+        self._pos = jnp.zeros((B,), jnp.int32)
+        self._active = jnp.zeros((B,), bool)
+        self._budget = jnp.zeros((B,), jnp.int32)
+        self._key = jax.random.PRNGKey(seed)
+        self._slot_req: List[Optional[Request]] = [None] * B
+        self._host_active = np.zeros(B, bool)
+
+        sampler, eos_id, pad_id = self.sampler, self.eos_id, self.pad_id
+
+        def decode_step(params, cache, last_logits, pos, active, budget,
+                        key):
+            key, sub = jax.random.split(key)
+            tok = sample(sampler, last_logits, sub, active=active,
+                         pad_id=pad_id)
+            budget = budget - active.astype(jnp.int32)
+            retire = active & ((tok == eos_id) | (budget <= 0))
+            # All slots run the model (a retired/free slot is a masked
+            # no-op lane — the occupancy loss the stats report); the
+            # active mask keeps dead lanes out of MoE expert capacity.
+            logits, cache = M.decode_step(cfg, params, cache, tok[:, None],
+                                          pos, active=active)
+            pos = pos + active.astype(jnp.int32)
+            new_active = active & ~retire
+            # One packed (2, B) buffer -> a single device->host read per
+            # token in the scheduler loop.
+            host_out = jnp.stack([tok, new_active.astype(jnp.int32)])
+            return (cache, logits[:, 0], pos, new_active, budget, host_out,
+                    key)
+
+        self._decode_fn = jax.jit(
+            decode_step,
+            donate_argnums=(1, 2, 3, 4, 5, 6) if donate else ())
+        # One jit handles every (group size, bucket) shape combination;
+        # power-of-two buckets keep the number of retraces small.
+        self._prefill_slots = jax.jit(
+            lambda p, c, t, ln, s: M.prefill_slots(cfg, p, c, t, ln, s),
+            donate_argnums=(1,) if donate else ())
+
+    def _admit(self) -> None:
+        free = [i for i, r in enumerate(self._slot_req) if r is None]
+        if not self._queue or not free:
+            return
+        take = self._queue[:len(free)]
+        del self._queue[:len(take)]
+        slots = np.asarray(free[:len(take)], np.int32)
+        P = _bucket(max(len(r.prompt) for r in take), self.max_len)
+        tokens = np.full((len(take), P), self.pad_id, np.int32)
+        lengths = np.empty(len(take), np.int32)
+        budgets = np.empty(len(take), np.int32)
+        for j, r in enumerate(take):
+            S = len(r.prompt)
+            tokens[j, P - S:] = r.prompt  # left-pad
+            lengths[j] = S
+            budgets[j] = min(r.max_new_tokens, self.max_len - S)
+
+        t0 = time.perf_counter()
+        logits_new, self._cache = self._prefill_slots(
+            self.params, self._cache, jnp.asarray(tokens),
+            jnp.asarray(lengths), jnp.asarray(slots))
+        self._logits = self._logits.at[slots].set(logits_new)
+        self._pos = self._pos.at[slots].set(lengths)
+        self._active = self._active.at[slots].set(True)
+        self._budget = self._budget.at[slots].set(budgets)
+        jax.block_until_ready(self._logits)
+        self.stats.prefill_s += time.perf_counter() - t0
+        self.stats.prefill_tokens += int(lengths.sum())
+        self.stats.admissions += len(take)
+        for i, r in zip(slots, take):
+            self._slot_req[int(i)] = r
+        self._host_active[slots] = True
+
+    # -- mesh placement ------------------------------------------------------
+    def _place_serve(self, mesh, params):
+        sharding.set_mesh_axis_sizes(mesh)
+        specs = sharding.param_specs(self.cfg, params, mode="serve")
+        specs = sharding.sanitize_specs(specs, params)
+        return jax.device_put(params, sharding.to_shardings(mesh, specs))
+
+    def _place_cache(self, mesh, cache):
+        specs = sharding.cache_specs(
+            self.cfg, cache, sharding._DP_AXES or None, self.max_batch)
+        specs = sharding.sanitize_specs(specs, cache)
+        return jax.device_put(cache, sharding.to_shardings(mesh, specs))
+
+    # -- legacy wave path ----------------------------------------------------
+    def _run_waves(self) -> Dict[int, List[int]]:
+        """Lockstep wave batching, bucketed by exact prompt length (padding
+        would let real tokens attend to pads without the masked-prefill
+        machinery of the continuous path)."""
         results: Dict[int, List[int]] = {}
         by_len: Dict[int, List[Request]] = {}
         for r in self._queue:
@@ -90,7 +324,6 @@ class ServingEngine:
                     results[r.uid] = r.output
         return results
 
-    # -- internals -----------------------------------------------------------
     def _run_wave(self, wave: List[Request]) -> None:
         B = len(wave)
         S = len(wave[0].prompt)  # waves are same-length by construction
@@ -109,14 +342,17 @@ class ServingEngine:
         logits = jax.block_until_ready(logits)
         self.stats.prefill_s += time.perf_counter() - t0
         self.stats.prefill_tokens += B * S
+        self.stats.admissions += B
 
         max_new = min(max(r.max_new_tokens for r in wave),
                       self.max_len - S)
         key = jax.random.PRNGKey(self._uid)
         done = np.zeros(B, bool)
         t0 = time.perf_counter()
-        next_tok = None
         for step in range(max_new):
+            self.stats.decode_steps += 1
+            self.stats.occupied_slot_steps += int((~done).sum())
+            self.stats.slot_steps += self.max_batch
             key, sub = jax.random.split(key)
             next_tok = sample(self.sampler, logits.reshape(B, -1), sub)
             nt = np.asarray(next_tok)

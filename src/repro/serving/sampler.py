@@ -13,12 +13,22 @@ class SamplerConfig:
     top_k: int = 0  # 0 => no truncation
 
 
-def sample(cfg: SamplerConfig, logits: jnp.ndarray, key) -> jnp.ndarray:
-    """logits: (B, V) -> token ids (B,)."""
+def sample(cfg: SamplerConfig, logits: jnp.ndarray, key,
+           active: jnp.ndarray = None, pad_id: int = 0) -> jnp.ndarray:
+    """logits: (B, V) -> token ids (B,).
+
+    ``active``: optional (B,) bool mask — rows where it is False emit
+    ``pad_id`` instead of a sampled token, so a finished (retired)
+    continuous-batching slot is a no-op inside the jitted decode step.
+    """
     if cfg.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits.astype(jnp.float32) / cfg.temperature
-    if cfg.top_k > 0:
-        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
-        logits = jnp.where(logits < kth, -1e30, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        lg = logits.astype(jnp.float32) / cfg.temperature
+        if cfg.top_k > 0:
+            kth = jax.lax.top_k(lg, cfg.top_k)[0][..., -1:]
+            lg = jnp.where(lg < kth, -1e30, lg)
+        tok = jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+    if active is not None:
+        tok = jnp.where(active, tok, jnp.int32(pad_id))
+    return tok

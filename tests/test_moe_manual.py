@@ -9,6 +9,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -33,7 +35,7 @@ SCRIPT = textwrap.dedent("""
     mesh = mesh_lib.make_mesh((2, 4), ("data", "model"))
     sh.set_mesh_axis_sizes(mesh)
     assert moe_lib.manual_path_available(cfg, 4 * 32)
-    with jax.set_mesh(mesh):
+    with sh.mesh_context(mesh):
         out, aux = jax.jit(
             lambda p_, x_: moe_lib.apply_moe_manual(cfg, p_, x_))(p, x)
     out = np.asarray(out, np.float32)
@@ -46,6 +48,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # forced-8-device subprocess: multi-minute XLA compile
 def test_moe_manual_matches_auto():
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,

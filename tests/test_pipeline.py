@@ -38,8 +38,9 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow  # forced-4-device subprocess: multi-minute XLA compile
 def test_pipeline_matches_sequential():
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-                       cwd=__file__.rsplit("/tests", 1)[0], timeout=300)
+                       cwd=__file__.rsplit("/tests", 1)[0], timeout=600)
     assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

@@ -1,12 +1,16 @@
-"""Serving engine: wave batching, determinism, samplers, MoE properties."""
+"""Serving engine: scheduling across modes, determinism, samplers.
+
+MoE dispatch property tests moved to ``test_moe_properties.py`` (they need
+hypothesis, which is optional).  Continuous-batching bit-identity tests
+live in ``test_continuous_batching.py``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import get_config
-from repro.models import model as M, moe as moe_lib
+from repro.models import model as M
 from repro.serving.engine import ServingEngine
 from repro.serving.sampler import SamplerConfig, sample
 
@@ -54,7 +58,9 @@ def test_engine_greedy_matches_manual_decode(tiny):
     assert out == manual
 
 
-def test_engine_waves_bucket_by_length(tiny):
+def test_engine_mixed_prompt_lengths_one_batch(tiny):
+    """The continuous engine admits mixed lengths into one batch — no
+    bucket-by-exact-length restriction (the seed wave engine's limit)."""
     cfg, params = tiny
     eng = ServingEngine(cfg, params, max_batch=4, max_len=32, eos_id=-1)
     rng = np.random.default_rng(1)
@@ -63,6 +69,10 @@ def test_engine_waves_bucket_by_length(tiny):
                    max_new_tokens=2)
     out = eng.run()
     assert len(out) == 6
+    assert all(len(t) == 2 for t in out.values())
+    # First four (mixed 4/4/7/7) go in one admission group; with budget 2
+    # the whole trace drains in a handful of shared steps.
+    assert eng.stats.decode_steps <= 4
 
 
 @pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "mamba2-1.3b",
@@ -78,6 +88,44 @@ def test_engine_generates_other_families(arch):
     assert all(0 <= t < cfg.vocab_size for t in toks)
 
 
+def test_wave_mode_forced_matches_continuous_greedy(tiny):
+    """mode='wave' (the benchmark baseline) agrees with continuous."""
+    cfg, params = tiny
+    prompt = np.arange(1, 9)
+    outs = {}
+    for mode in ("continuous", "wave"):
+        eng = ServingEngine(cfg, params, max_batch=2, max_len=32, eos_id=-1,
+                            mode=mode)
+        eng.submit(prompt, max_new_tokens=4)
+        outs[mode] = list(eng.run().values())[0]
+        assert eng.mode == mode
+    assert outs["continuous"] == outs["wave"]
+
+
+def test_continuous_mode_rejects_recurrent_families():
+    cfg = get_config("mamba2-1.3b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="slot-addressable"):
+        ServingEngine(cfg, params, mode="continuous")
+
+
+def test_submit_rejects_overlong_prompt(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=16, eos_id=-1)
+    with pytest.raises(ValueError, match="no decode room"):
+        eng.submit(np.arange(1, 18), max_new_tokens=2)
+
+
+def test_submit_rejects_zero_budget(tiny):
+    """Both modes reject max_new_tokens < 1 (they used to diverge)."""
+    cfg, params = tiny
+    for mode in ("continuous", "wave"):
+        eng = ServingEngine(cfg, params, max_batch=1, max_len=16,
+                            eos_id=-1, mode=mode)
+        with pytest.raises(ValueError, match="max_new_tokens"):
+            eng.submit(np.arange(1, 5), max_new_tokens=0)
+
+
 def test_sampler_greedy_vs_topk():
     logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
     assert int(sample(SamplerConfig(), logits, jax.random.PRNGKey(0))[0]) == 1
@@ -86,36 +134,8 @@ def test_sampler_greedy_vs_topk():
     assert int(s[0]) in (1, 2)
 
 
-# ---------------------------------------------------------------------------
-# MoE dispatch properties
-# ---------------------------------------------------------------------------
-
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 1000))
-def test_moe_capacity_drops_are_bounded(seed):
-    """With capacity_factor >= 1 and balanced-ish routing, most tokens get
-    served; dropped tokens produce zero expert output (not NaN)."""
-    cfg = get_config("qwen2-moe-a2.7b").reduced()
-    p = moe_lib.init_moe(cfg, jax.random.PRNGKey(seed))
-    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 16, cfg.d_model)
-                          ).astype(jnp.bfloat16)
-    out, aux = moe_lib.apply_moe(cfg, p, x)
-    assert out.shape == x.shape
-    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
-    assert float(aux) >= 0.99  # >= 1 for any distribution (Switch aux loss)
-
-
-def test_moe_identical_tokens_identical_outputs():
-    cfg = get_config("qwen3-moe-235b-a22b").reduced()
-    p = moe_lib.init_moe(cfg, jax.random.PRNGKey(0))
-    x = jnp.broadcast_to(
-        jax.random.normal(jax.random.PRNGKey(1), (1, 1, cfg.d_model)),
-        (1, 8, cfg.d_model)).astype(jnp.bfloat16)
-    out, _ = moe_lib.apply_moe(cfg, p, x)
-    out = np.asarray(out, np.float32)
-    # All-but-dropped identical tokens produce identical outputs; with
-    # capacity >= 8 nothing is dropped here.
-    for i in range(1, 8):
-        served = np.abs(out[0, i]).sum() > 0
-        if served:
-            np.testing.assert_allclose(out[0, i], out[0, 0], atol=1e-5)
+def test_sampler_active_mask_is_noop_row():
+    logits = jnp.asarray([[0.0, 5.0, 1.0], [0.0, 5.0, 1.0]])
+    toks = sample(SamplerConfig(), logits, jax.random.PRNGKey(0),
+                  active=jnp.asarray([True, False]), pad_id=7)
+    assert toks.tolist() == [1, 7]
