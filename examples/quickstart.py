@@ -41,9 +41,22 @@ def main():
 
     # 2. Generate through the continuous-batching serving engine: submit
     # requests with different prompt AND completion lengths, then step the
-    # scheduler — each step() admits queued work into free KV-cache slots
-    # and runs one jitted masked decode across all slots.
+    # scheduler — each step() admits queued work, prefills (at most) one
+    # prompt chunk, and runs one jitted masked decode across all lanes.
+    #
+    # KV memory is PAGED: requests share one pool of fixed-size token
+    # blocks through per-lane block tables, reserving only their own
+    # worst case instead of a full max_len stripe.  Knobs:
+    #   block_size    — tokens per KV block; small (8-16) minimizes
+    #                   fragmentation, >= max_len degenerates to one
+    #                   stripe per request (the old slot engine);
+    #   num_blocks    — pool size (default: max_batch stripes' worth);
+    #   prefill_chunk — max prompt tokens prefilled per step, so a long
+    #                   prompt's admission interleaves with in-flight
+    #                   decodes instead of stalling them (None = whole
+    #                   prompt at once).
     eng = ServingEngine(cfg, params, max_batch=2, max_len=48, eos_id=-1,
+                        block_size=8, prefill_chunk=16,
                         sampler=SamplerConfig(temperature=0.7, top_k=20))
     eng.submit(np.arange(1, 9), max_new_tokens=8)
     eng.submit(np.arange(5, 18), max_new_tokens=5)
@@ -57,8 +70,10 @@ def main():
         done = eng.run()
     for uid, toks in sorted(done.items()):
         print(f"generated[{uid}]: {toks}")
+    blocks = f", KV block utilization {eng.stats.block_utilization:.0%}" \
+        if eng.mode == "continuous" else ""
     print(f"decode throughput: {eng.stats.tokens_per_s:.1f} tok/s, "
-          f"slot occupancy {eng.stats.slot_occupancy:.0%} (CPU)")
+          f"lane occupancy {eng.stats.slot_occupancy:.0%}{blocks} (CPU)")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,15 @@ def main():
                     choices=["auto", "continuous", "wave"],
                     help="scheduler: continuous batching (attention "
                          "families) or the lockstep wave baseline")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="tokens per paged-KV block (>= max_len degenerates "
+                         "to one stripe per request)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="KV block pool size (default: max_batch stripes' "
+                         "worth)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="max prompt tokens prefilled per scheduler step "
+                         "(0 = whole prompt in one call)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,6 +47,8 @@ def main():
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch,
         max_len=64 + args.max_new, mode=args.mode, seed=args.seed,
+        block_size=args.block_size, num_blocks=args.num_blocks,
+        prefill_chunk=args.prefill_chunk or None,
         sampler=SamplerConfig(temperature=args.temperature, top_k=50))
 
     rng = np.random.default_rng(args.seed)
@@ -49,10 +60,13 @@ def main():
     for uid, toks in sorted(results.items())[:4]:
         print(f"req {uid}: {toks[:16]}{'...' if len(toks) > 16 else ''}")
     s = engine.stats
-    print(f"prefill {s.prefill_tokens} tok in {s.prefill_s:.2f}s; "
+    paged = (f" ({s.prefill_chunks} chunks)", f", KV block utilization "
+             f"{s.block_utilization:.0%}") if engine.mode == "continuous" \
+        else ("", "")
+    print(f"prefill {s.prefill_tokens} tok in {s.prefill_s:.2f}s{paged[0]}; "
           f"generated {s.generated_tokens} tok in {s.decode_s:.2f}s "
           f"({s.tokens_per_s:.1f} tok/s, mode={engine.mode}, "
-          f"slot occupancy {s.slot_occupancy:.0%})")
+          f"lane occupancy {s.slot_occupancy:.0%}{paged[1]})")
 
 
 if __name__ == "__main__":

@@ -266,28 +266,60 @@ def attention_decode(
     v_cache: jnp.ndarray,
     position: jnp.ndarray,
     use_rope: bool = True,
+    block_tables: Optional[jnp.ndarray] = None,
 ):
     """Single-token decode with in-place cache update.
 
-    x: (B, 1, d); k_cache/v_cache: (B, S_max, Hk, D); position: scalar int
-    OR a per-row (B,) int vector — rows of a batch may sit at different
-    sequence offsets (continuous batching).  The new K/V is scattered into
-    each row's own cache index and the attention mask is per-row.
+    x: (B, 1, d); position: scalar int OR a per-row (B,) int vector — rows
+    of a batch may sit at different sequence offsets (continuous batching).
+    The new K/V is scattered into each row's own cache index and the
+    attention mask is per-row.
+
+    Two cache layouts:
+      * dense (block_tables=None): k_cache/v_cache are (B, S_max, Hk, D)
+        slot stripes, row b's position j lives at [b, j];
+      * paged: k_cache/v_cache are (N, bs, Hk, D) pools of fixed-size token
+        blocks shared by all rows, and ``block_tables`` (B, T) int32 maps
+        row b's block index j//bs to a pool block (serving.paged hands these
+        out; unallocated entries point at the trash block).  The new K/V is
+        scattered through the table and the context is gathered back
+        block-by-block — rows only ever touch their own blocks, so long and
+        short sequences share one pool.
+
     Returns (out (B,1,d), k_cache, v_cache).
     """
     B = x.shape[0]
-    S_max = k_cache.shape[1]
     q, k, v = _project_qkv(cfg, p, x, x)
     pos = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (B,))
     if use_rope:
         q = apply_rope(cfg, q, pos[:, None])
         k = apply_rope(cfg, k, pos[:, None])
-    rows = jnp.arange(B)
-    k_cache = k_cache.at[rows, pos].set(k[:, 0].astype(k_cache.dtype))
-    v_cache = v_cache.at[rows, pos].set(v[:, 0].astype(v_cache.dtype))
-    # Mask out positions beyond each row's current one.
-    valid = (jnp.arange(S_max)[None] <= pos[:, None])[:, None, None, None, :]
-    out = _sdpa(cfg, q, k_cache.astype(x.dtype), v_cache.astype(x.dtype), valid)
+    if block_tables is None:
+        S_max = k_cache.shape[1]
+        rows = jnp.arange(B)
+        k_cache = k_cache.at[rows, pos].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[rows, pos].set(v[:, 0].astype(v_cache.dtype))
+        kc, vc = k_cache, v_cache
+        # Mask out positions beyond each row's current one.
+        valid = (jnp.arange(S_max)[None] <= pos[:, None])
+    else:
+        bs = k_cache.shape[1]
+        Hk, D = k.shape[2], k.shape[3]
+        rows = jnp.arange(B)
+        # Dead lanes carry all-trash tables, so their writes land in the
+        # trash block and cannot clobber a block re-assigned to a live lane.
+        blk = block_tables[rows, pos // bs]
+        k_cache = k_cache.at[blk, pos % bs].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[blk, pos % bs].set(v[:, 0].astype(v_cache.dtype))
+        # Gather each row's context in block-table order: block j covers
+        # positions [j*bs, (j+1)*bs), so the flattened gather reads exactly
+        # like a dense stripe (garbage from trash/unwritten tails is dead
+        # under the position mask).
+        kc = k_cache[block_tables].reshape(B, -1, Hk, D)
+        vc = v_cache[block_tables].reshape(B, -1, Hk, D)
+        valid = (jnp.arange(kc.shape[1])[None] <= pos[:, None])
+    out = _sdpa(cfg, q, kc.astype(x.dtype), vc.astype(x.dtype),
+                valid[:, None, None, None, :])
     return out @ p["wo"], k_cache, v_cache
 
 

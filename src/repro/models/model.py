@@ -177,6 +177,67 @@ def _scan_blocks(body, h, blocks, remat: bool):
     return h, aux
 
 
+def _attn_block_body(cfg: ModelConfig, blk: Params, x: jnp.ndarray,
+                     positions: jnp.ndarray,
+                     mask: Optional[jnp.ndarray] = None,
+                     moe_valid: Optional[jnp.ndarray] = None,
+                     ctx_kv=None):
+    """ONE per-layer block body for the attention families (dense/moe/vlm).
+
+    ``backbone`` (train/full forward), ``prefill`` (wave cache build) and
+    ``prefill_slots`` (paged chunked admission) all run this body — they
+    differ only in the (positions, mask) they pass and in what they do with
+    the returned K/V, so the greedy bit-identity contract pinned by
+    tests/test_continuous_batching.py holds across all three by
+    construction.
+
+    positions: (S,) or (B, S) rope positions.
+    mask: None => plain causal over this call's tokens (long sequences take
+      the blockwise flash path); else (B, Sq, Skv) bool over THIS call's
+      keys (left-pad masking).
+    moe_valid: (B, S) bool routing-validity mask (pads/dead lanes consume
+      no expert capacity); only meaningful for the moe family.
+    ctx_kv: optional (ctx_k, ctx_v, ctx_mask) of ALREADY-CACHED context —
+      ctx_k/ctx_v (B, Skv_ctx, Hk, D) gathered from a paged KV cache,
+      ctx_mask (B, Skv_ctx) bool — prepended to the key sequence so a
+      prefill chunk attends to the prompt tokens cached by earlier chunks.
+
+    Returns (x_out, k, v, aux) with k/v of this call's tokens (compute
+    dtype — callers cast to the cache storage dtype).
+    """
+    xn = layers.apply_norm(cfg, blk["ln_attn"], x)
+    q, k, v = layers._project_qkv(cfg, blk["attn"], xn, xn)
+    q = layers.apply_rope(cfg, q, positions)
+    k = layers.apply_rope(cfg, k, positions)
+    q = sharding.constrain_heads(q)
+    B, S = x.shape[0], x.shape[1]
+    if mask is None and ctx_kv is None \
+            and S >= layers.CHUNKED_ATTN_THRESHOLD and S % layers.Q_CHUNK == 0:
+        a = layers.chunked_attention(q, k, v, causal=True)
+    else:
+        if mask is None:
+            mask = jnp.tril(jnp.ones((S, S), bool))[None]
+        kk, vv = k, v
+        if ctx_kv is not None:
+            ck, cv, cmask = ctx_kv
+            kk = jnp.concatenate([ck.astype(x.dtype), k], axis=1)
+            vv = jnp.concatenate([cv.astype(x.dtype), v], axis=1)
+            mask = jnp.concatenate(
+                [jnp.broadcast_to(cmask[:, None, :], (B, S, ck.shape[1])),
+                 jnp.broadcast_to(mask, (B, S, S))], axis=-1)
+        a = layers._sdpa(cfg, q, kk, vv, mask[:, None, None])
+    x = x + a @ blk["attn"]["wo"]
+    if "moe" in blk:
+        y, aux = moe_lib.apply_moe(
+            cfg, blk["moe"], layers.apply_norm(cfg, blk["ln_mlp"], x),
+            valid=moe_valid)
+    else:
+        y = layers.apply_mlp(cfg, blk["mlp"],
+                             layers.apply_norm(cfg, blk["ln_mlp"], x))
+        aux = 0.0
+    return x + y, k, v, aux
+
+
 def backbone(cfg: ModelConfig, params: Params, h: jnp.ndarray,
              positions: jnp.ndarray, remat: bool = False,
              encoder_out: Optional[jnp.ndarray] = None):
@@ -185,19 +246,10 @@ def backbone(cfg: ModelConfig, params: Params, h: jnp.ndarray,
     Returns (h, aux_loss).
     """
     fam = cfg.family
-    if fam in ("dense", "vlm"):
+    if fam in ("dense", "moe", "vlm"):
         def body(x, blk):
-            return layers.apply_dense_block(cfg, blk, x, positions), 0.0
-        h, aux = _scan_blocks(body, h, params["blocks"], remat)
-        return h, jnp.sum(aux)
-    if fam == "moe":
-        def body(x, blk):
-            x = x + layers.attention(cfg, blk["attn"],
-                                     layers.apply_norm(cfg, blk["ln_attn"], x),
-                                     positions)
-            y, aux = moe_lib.apply_moe(cfg, blk["moe"],
-                                       layers.apply_norm(cfg, blk["ln_mlp"], x))
-            return x + y, aux
+            x, _, _, aux = _attn_block_body(cfg, blk, x, positions)
+            return x, aux
         h, aux = _scan_blocks(body, h, params["blocks"], remat)
         return h, jnp.sum(aux)
     if fam == "ssm":
@@ -367,62 +419,87 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
     raise ValueError(fam)
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> Params:
+    """KV cache as a pool of fixed-size token blocks (attention families).
+
+    Layout (L, num_blocks, block_size, Hk, hd): block ``b`` holds
+    ``block_size`` consecutive token positions of whichever sequence owns it
+    per the host-side ``serving.paged.BlockAllocator``; block 0 is the trash
+    block dead lanes write into.  ``layers.attention_decode`` and
+    ``prefill_slots`` address it through per-row block tables.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"paged KV caches cover the attention families, not {fam!r}")
+    KVD = kv_store_dtype(cfg)
+    hk, hd, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    return {
+        "k": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
+        "v": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
+    }
+
+
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
 
 
-def reset_slot(cache: Params, slot) -> Params:
-    """Zero batch row(s) ``slot`` of an attention-family KV cache.
-
-    ``slot`` is an int or int array of batch indices.  Works on any cache
-    whose leaves are (L, B, ...) arrays (dense/moe/vlm/audio).  SSM and
-    hybrid caches nest per-group state with a different batch-dim placement
-    and are not slot-addressable; continuous batching does not serve them.
-    """
-    return jax.tree.map(
-        lambda x: x.at[:, slot].set(jnp.zeros((), x.dtype)), cache)
-
-
 def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
                   tokens: jnp.ndarray, lengths: jnp.ndarray,
-                  slots: jnp.ndarray,
+                  block_tables: jnp.ndarray,
+                  start: Optional[jnp.ndarray] = None,
                   patch_embeds: Optional[jnp.ndarray] = None
                   ) -> Tuple[jnp.ndarray, Params]:
-    """Prefill left-padded prompts into specific KV-cache slots.
+    """Prefill one left-padded prompt CHUNK per row into a paged KV cache.
 
-    The continuous-batching admission path: a group of queued requests with
+    The continuous-batching admission path: a group of requests with
     *different* prompt lengths is left-padded to a common bucket length and
-    prefilled in one call, each request writing its K/V into its own cache
-    slot at its own offset.
+    prefilled in one call, each row writing its K/V into its own cache
+    blocks at its own offset.  Long prompts are processed in fixed-size
+    chunks across several calls (interleaved with decode iterations by the
+    engine, so admission never stalls in-flight decodes): the first call
+    passes ``start=None``, later calls pass each row's already-cached token
+    count and the chunk attends to the cached context through a block-table
+    gather.
 
-    tokens:  (Bn, P) int32, each row LEFT-padded to P;
-    lengths: (Bn,) true prompt lengths (<= P);
-    slots:   (Bn,) batch rows of ``cache`` to fill;
-    patch_embeds: (Bn, num_patches, d) for the vlm family (zeros if None).
+    tokens:  (Bn, P) int32, each row's chunk LEFT-padded to P;
+    lengths: (Bn,) true token count of this chunk (<= P);
+    block_tables: (Bn, T) int32 rows of the paged block table
+        (``serving.paged.BlockAllocator.block_table()``), grown by the
+        caller to cover this chunk's writes;
+    start:   None => every row starts at cache position 0 (first chunk; the
+        vlm patch prefix is embedded and written here); else (Bn,) int32
+        cache positions already filled per row (INCLUDING any vlm prefix);
+    patch_embeds: (Bn, num_patches, d) for the vlm family (zeros if None;
+        ignored on continuation chunks).
 
     Pad positions are masked out of the attention (so dense/vlm results are
     bit-identical to unpadded single-request prefill; for moe, co-admitted
     requests share expert-capacity buffers, so under *tight* capacity
     factors drops — and therefore logits — can differ from the solo run)
-    and pad RoPE phases are clipped to zero.  After the layer scan each row's token K/V is
-    rolled left-compact, so the slot layout is ``[patches | prompt | junk]``
-    with the junk tail strictly above the row's ``pos`` pointer — dead under
-    the per-row decode mask and progressively overwritten by decode writes.
+    and pad RoPE phases are clipped to each row's first real position.
+    After the layer scan each row's K/V is rolled left-compact
+    ([patches | chunk | junk]) and scattered through its block table at
+    positions ``start + i``; junk-tail writes are dropped, so nothing lands
+    outside the row's own blocks.
 
     Families: dense / moe / vlm (attention KV caches).  MoE blocks receive
     the real-token mask as routing validity, so pad tokens consume no
     expert capacity and cannot displace live tokens.
-    Returns (last-real-token logits (Bn, vocab), updated cache).
+    Returns (last-real-token logits (Bn, vocab), updated cache).  The
+    logits are only meaningful on a row's FINAL chunk.
     """
     fam = cfg.family
     if fam not in ("dense", "moe", "vlm"):
         raise NotImplementedError(
             f"prefill_slots supports attention KV caches, not family {fam!r}")
     Bn, P = tokens.shape
+    first = start is None
     pad = (P - lengths).astype(jnp.int32)  # (Bn,)
     h = params["embed"][tokens]
     prefix = 0
-    if fam == "vlm":
+    if fam == "vlm" and first:
         if patch_embeds is None:
             patch_embeds = jnp.zeros((Bn, cfg.num_patches, cfg.d_model),
                                      DTYPE)
@@ -430,8 +507,11 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
         h = jnp.concatenate([patches.astype(h.dtype), h], axis=1)
         prefix = cfg.num_patches
     S = prefix + P
+    start_v = jnp.zeros((Bn,), jnp.int32) if first \
+        else start.astype(jnp.int32)
 
-    tok_pos = prefix + jnp.maximum(jnp.arange(P)[None] - pad[:, None], 0)
+    tok_pos = start_v[:, None] + prefix \
+        + jnp.maximum(jnp.arange(P)[None] - pad[:, None], 0)
     if prefix:
         positions = jnp.concatenate(
             [jnp.broadcast_to(jnp.arange(prefix)[None], (Bn, prefix)),
@@ -444,42 +524,51 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
     real_key = (sidx[None] < prefix) | (sidx[None] >= prefix + pad[:, None])
     mask = (sidx[None, None, :] <= sidx[None, :, None]) \
         & real_key[:, None, :]  # (Bn, S, S)
-    mask5 = mask[:, None, None]  # broadcast to (Bn, Hk, rep, S, S)
     kvd = kv_store_dtype(cfg)
+    bs = cache["k"].shape[2]
+    if not first:
+        # Cached-context visibility: position j of the gathered blocks is
+        # live iff j < start (blocks flatten back to position order).
+        ctx_len = block_tables.shape[1] * bs
+        ctx_mask = jnp.arange(ctx_len)[None] < start_v[:, None]  # (Bn, Tbs)
 
-    def body(x, blk):
-        xn = layers.apply_norm(cfg, blk["ln_attn"], x)
-        q, k, v = layers._project_qkv(cfg, blk["attn"], xn, xn)
-        q = layers.apply_rope(cfg, q, positions)
-        k = layers.apply_rope(cfg, k, positions)
-        a = layers._sdpa(cfg, q, k, v, mask5)
-        x = x + a @ blk["attn"]["wo"]
-        if fam == "moe":
-            y, _ = moe_lib.apply_moe(
-                cfg, blk["moe"], layers.apply_norm(cfg, blk["ln_mlp"], x),
-                valid=real_key)
-            x = x + y
-        else:
-            x = x + layers.apply_mlp(
-                cfg, blk["mlp"], layers.apply_norm(cfg, blk["ln_mlp"], x))
+    def body(x, blk_kv):
+        blk, kc, vc = blk_kv
+        ctx_kv = None
+        if not first:
+            kg = kc[block_tables].reshape(Bn, -1, *kc.shape[2:])
+            vg = vc[block_tables].reshape(Bn, -1, *vc.shape[2:])
+            ctx_kv = (kg, vg, ctx_mask)
+        x, k, v, _ = _attn_block_body(cfg, blk, x, positions, mask=mask,
+                                      moe_valid=real_key, ctx_kv=ctx_kv)
         return x, (k.astype(kvd), v.astype(kvd))
 
-    h, (ks, vs) = jax.lax.scan(body, h, params["blocks"])
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (params["blocks"], cache["k"], cache["v"]))
 
-    # Left-compact each row's token K/V: real tokens to offsets 0..len-1.
+    # Left-compact each row's token K/V: real tokens to offsets 0..len-1
+    # after the prefix, then scatter through the block table at positions
+    # start + i.  Junk-tail entries are redirected out of bounds and
+    # dropped so they cannot touch another row's blocks.
     roll_idx = (jnp.arange(P)[None] + pad[:, None]) % P  # (Bn, P)
-    ctx = cache["k"].shape[2]
 
-    def fit(kv):  # (L, Bn, S, hk, hd) -> (L, Bn, ctx, hk, hd)
+    def compact(kv):  # (L, Bn, S, hk, hd), token part rolled left
         head, tail = kv[:, :, :prefix], kv[:, :, prefix:]
         tail = jnp.take_along_axis(
             tail, roll_idx[None, :, :, None, None], axis=2)
-        kv = jnp.concatenate([head, tail], axis=2) if prefix else tail
-        return jnp.pad(kv, ((0, 0), (0, 0), (0, ctx - S), (0, 0), (0, 0)))
+        return jnp.concatenate([head, tail], axis=2) if prefix else tail
 
+    N = cache["k"].shape[1]
+    T = block_tables.shape[1]
+    dest = start_v[:, None] + jnp.arange(S)[None]  # (Bn, S) cache positions
+    blk_idx = jnp.minimum(dest // bs, T - 1)
+    blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)  # (Bn, S)
+    writable = jnp.arange(S)[None] < prefix + lengths[:, None]
+    blk = jnp.where(writable, blk, N)  # junk -> out of bounds -> dropped
+    off = dest % bs
     cache = dict(cache,
-                 k=cache["k"].at[:, slots].set(fit(ks)),
-                 v=cache["v"].at[:, slots].set(fit(vs)))
+                 k=cache["k"].at[:, blk, off].set(compact(ks), mode="drop"),
+                 v=cache["v"].at[:, blk, off].set(compact(vs), mode="drop"))
     # Left padding aligns every row's last REAL token at index S-1.
     logits = unembed(cfg, params, h[:, -1])
     return logits, cache
@@ -487,7 +576,8 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 tokens: jnp.ndarray, position: jnp.ndarray,
-                active: Optional[jnp.ndarray] = None
+                active: Optional[jnp.ndarray] = None,
+                block_tables: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, Params]:
     """One autoregressive step. tokens: (B, 1); position: scalar int32 OR a
     per-row (B,) int32 vector (index of each row's new token within the
@@ -500,11 +590,19 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
     capacity so they cannot displace live rows' tokens; other families
     ignore the mask (dead lanes are already masked out by position).
 
+    block_tables: optional (B, T) int32 — the cache is a paged block pool
+    (``init_paged_cache``) addressed per row through this table instead of
+    a dense (L, B, ctx) stripe; attention K/V reads gather over the table
+    (dense/moe/vlm only).
+
     Returns (logits (B, 1, vocab), updated cache).
     """
     fam = cfg.family
     h = params["embed"][tokens]
     B = tokens.shape[0]
+    if block_tables is not None and fam not in ("dense", "moe", "vlm"):
+        raise NotImplementedError(
+            f"paged decode covers the attention families, not {fam!r}")
 
     if fam in ("dense", "moe", "vlm"):
         pos = position + (cfg.num_patches if fam == "vlm" else 0)
@@ -513,7 +611,8 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
             blk, kc, vc = blk_kv
             a, kc, vc = layers.attention_decode(
                 cfg, blk["attn"],
-                layers.apply_norm(cfg, blk["ln_attn"], x), kc, vc, pos)
+                layers.apply_norm(cfg, blk["ln_attn"], x), kc, vc, pos,
+                block_tables=block_tables)
             x = x + a
             if fam == "moe":
                 y, _ = moe_lib.apply_moe(
@@ -621,45 +720,39 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray],
 
     if fam in ("dense", "moe", "vlm", "audio"):
         blocks = params["blocks"] if fam != "audio" else params["dec_blocks"]
+        kvd = kv_store_dtype(cfg)
 
-        def body(x, blk):
-            # Recompute K/V for the cache (weights are cheap to re-apply and
-            # this keeps backbone() single-sourced).
-            attn_p = blk["attn"] if fam != "audio" else blk["self_attn"]
-            ln = blk["ln_attn"] if fam != "audio" else blk["ln_self"]
-            xn = layers.apply_norm(cfg, ln, x)
-            use_rope = fam != "audio"
-            q, k, v = layers._project_qkv(cfg, attn_p, xn, xn)
-            if use_rope:
-                q = layers.apply_rope(cfg, q, positions)
-                k = layers.apply_rope(cfg, k, positions)
-            if S_ctx >= layers.CHUNKED_ATTN_THRESHOLD and \
-                    S_ctx % layers.Q_CHUNK == 0:
-                a = layers.chunked_attention(q, k, v, causal=True)
-            else:
-                mask = jnp.tril(jnp.ones((S_ctx, S_ctx), bool))[None, None, None]
-                a = layers._sdpa(cfg, q, k, v, mask)
-            x = x + a @ attn_p["wo"]
-            extra = {}
-            if fam == "audio":
+        if fam == "audio":
+            def body(x, blk):
+                xn = layers.apply_norm(cfg, blk["ln_self"], x)
+                q, k, v = layers._project_qkv(cfg, blk["self_attn"], xn, xn)
+                if S_ctx >= layers.CHUNKED_ATTN_THRESHOLD and \
+                        S_ctx % layers.Q_CHUNK == 0:
+                    a = layers.chunked_attention(q, k, v, causal=True)
+                else:
+                    mask = jnp.tril(
+                        jnp.ones((S_ctx, S_ctx), bool))[None, None, None]
+                    a = layers._sdpa(cfg, q, k, v, mask)
+                x = x + a @ blk["self_attn"]["wo"]
                 F = encoder_out.shape[1]
                 ck = (encoder_out @ blk["cross_attn"]["wk"]).reshape(
                     B, F, cfg.num_kv_heads, cfg.head_dim)
                 cv = (encoder_out @ blk["cross_attn"]["wv"]).reshape(
                     B, F, cfg.num_kv_heads, cfg.head_dim)
                 xc = layers.apply_norm(cfg, blk["ln_cross"], x)
-                x = x + layers.cross_attention(cfg, blk["cross_attn"], xc, ck, cv)
-                extra = {"cross_k": ck.astype(kv_store_dtype(cfg)),
-                         "cross_v": cv.astype(kv_store_dtype(cfg))}
-            if fam == "moe":
-                y, _ = moe_lib.apply_moe(
-                    cfg, blk["moe"], layers.apply_norm(cfg, blk["ln_mlp"], x))
-                x = x + y
-            else:
+                x = x + layers.cross_attention(cfg, blk["cross_attn"], xc,
+                                               ck, cv)
                 x = x + layers.apply_mlp(
                     cfg, blk["mlp"], layers.apply_norm(cfg, blk["ln_mlp"], x))
-            kvd = kv_store_dtype(cfg)
-            return x, dict(k=k.astype(kvd), v=v.astype(kvd), **extra)
+                return x, dict(k=k.astype(kvd), v=v.astype(kvd),
+                               cross_k=ck.astype(kvd), cross_v=cv.astype(kvd))
+        else:
+            # K/V for the cache is recomputed by the shared block body
+            # (weights are cheap to re-apply and this keeps the layer math
+            # single-sourced with backbone/prefill_slots).
+            def body(x, blk):
+                x, k, v, _ = _attn_block_body(cfg, blk, x, positions)
+                return x, dict(k=k.astype(kvd), v=v.astype(kvd))
 
         h, kv = jax.lax.scan(body, h, blocks)
         pad = cache["k"].shape[2] - S_ctx

@@ -147,8 +147,14 @@ def param_specs(cfg: ModelConfig, params_shape, mode: str = "train") -> Any:
 # ---------------------------------------------------------------------------
 
 def cache_specs(cfg: ModelConfig, cache_shape, dp: Optional[Tuple[str, ...]],
-                batch: int, tp: str = "model") -> Any:
-    """dp = batch axes (None to replicate small batches)."""
+                batch: int, tp: str = "model", paged: bool = False) -> Any:
+    """dp = batch axes (None to replicate small batches).
+
+    paged: the k/v leaves are block pools (L, N, bs, Hk, hd) rather than
+    dense (L, B, S, Hk, hd) stripes — any request's block table may point
+    anywhere in the pool, so the pool is NOT batch-shardable; shard the KV
+    heads over ``model`` instead (matches the decode attention TP layout).
+    """
     dpa = dp if (dp and batch % _axes_size_hint(dp) == 0) else None
 
     def rule(path, leaf):
@@ -156,6 +162,8 @@ def cache_specs(cfg: ModelConfig, cache_shape, dp: Optional[Tuple[str, ...]],
         path_s = _path_str(path)
         name = path_s.rsplit("/", 1)[-1]
         if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+            if paged:
+                return P(None, None, None, tp, None)
             # (L, B, S, Hk, hd): batch over dp, sequence over model.
             return P(None, dpa, tp, None, None)
         if name == "state":

@@ -1,44 +1,68 @@
-"""Serving engine: continuous batching over a slot-based KV cache.
+"""Serving engine: continuous batching over a PAGED (block) KV cache.
 
 The engine prices exactly what the paper's TCO/token metric prices: the
 generate stage under heavy multi-tenant load.  The seed's wave batcher
 (lockstep waves, bucketed by exact prompt length, host sync per token)
 modeled exactly the utilization losses the paper's batching/pipelining
-analysis (§4.2, Fig 6/8) says to avoid; this engine replaces it with
-Orca/vLLM-style iteration-level scheduling:
+analysis (§4.2, Fig 6/8) says to avoid.  PR 1 replaced it with Orca-style
+iteration-level scheduling over per-slot ``max_len`` KV stripes; this
+version replaces the stripes with vLLM-style paged allocation plus chunked
+prefill:
 
-  * the KV cache is allocated ONCE as (L, max_batch, ctx, Hk, hd); each
-    batch row is a *slot* owned by at most one in-flight request, with a
-    per-row ``pos`` pointer so rows decode at different sequence offsets;
-  * admission: queued requests (any mix of prompt lengths) are LEFT-padded
-    to a power-of-two bucket and prefilled together through a masked
-    prefill (``model.prefill_slots``) that writes each prompt's K/V into a
-    freed slot at its own offset — no bucket-by-exact-length restriction;
+  * the KV cache is ONE pool of fixed-size token blocks
+    (``model.init_paged_cache``, (L, num_blocks, block_size, Hk, hd))
+    shared by every request; a host-side free-list allocator
+    (``serving.paged.BlockAllocator``) hands blocks to decode lanes as
+    their sequences grow and reclaims them at retirement, so a long prompt
+    no longer strands a full ``max_len`` stripe that short requests could
+    use — admission is **block-granular**;
+  * each lane addresses the pool through a per-row block table threaded
+    into the jitted decode step: ``layers.attention_decode`` scatters the
+    new K/V through the table and gathers the context back block-by-block;
+  * admission: queued requests reserve their worst-case block count
+    (prompt + decode budget — no mid-flight preemption needed), then the
+    prompt is prefilled through ``model.prefill_slots`` in left-padded
+    buckets.  Prompts longer than ``prefill_chunk`` are processed in
+    **chunks interleaved with decode iterations**, so admitting a long
+    prompt no longer stalls in-flight decodes for its whole prefill;
   * decode: one fully jitted masked step carries
-    ``(cache, last_logits, pos[B], active[B], budget[B], rng)`` with donated
-    buffers; sampling runs inside the jit (``serving.sampler.sample`` with a
-    per-row active mask, so finished slots are no-ops) and EOS/budget
-    retirement is computed on-device — the hot loop is one dispatch plus one
-    token-sized device->host read per generated token;
-  * scheduling: slots freed by EOS or ``max_new_tokens`` are refilled from
-    the queue between decode iterations (stale K/V needs no zeroing — it is
-    dead under the per-row mask and admission overwrites the whole slot
-    row; ``model.reset_slot`` exists for callers that want a clean cache).
+    ``(cache, last_logits, pos[B], active[B], budget[B], keys[B])`` with
+    donated buffers; sampling runs inside the jit with a PER-REQUEST key
+    (``fold_in(seed, uid)``, so stochastic outputs are reproducible no
+    matter which co-tenants share the batch) and EOS/budget retirement is
+    computed on-device — the hot loop is one dispatch plus one token-sized
+    device->host read per generated token;
+  * scheduling: lanes freed by EOS or ``max_new_tokens`` return their
+    blocks to the pool and are refilled from the queue between decode
+    iterations.  Freed blocks are NOT zeroed — a retired lane's block
+    table is pointed at the trash block, so its masked no-op writes cannot
+    touch a re-assigned block.
+
+Knobs (see also examples/quickstart.py):
+  * ``block_size`` — tokens per KV block.  Small blocks (8-16) minimize
+    fragmentation (waste is < one block per request); ``block_size >=
+    max_len`` degenerates to PR 1's slot-per-request reservation and is
+    the baseline in ``benchmarks/serving_bench.py``.
+  * ``num_blocks`` — pool size; defaults to ``max_batch`` full-length
+    stripes' worth.  Admission is limited by blocks (memory), lanes
+    (``max_batch``) and per-request context (``max_len``) independently.
+  * ``prefill_chunk`` — max prompt tokens prefilled per scheduler
+    iteration (None = whole prompt in one call).
 
 Families with attention KV caches (dense, moe, vlm) run this continuous
 path.  SSM/hybrid/audio recurrent state cannot be left-pad-masked without
 polluting the scan state, so those families fall back to the seed's wave
-batching; ``mode="wave"`` forces that path for any family (it is the
-baseline in ``benchmarks/serving_bench.py``).
+batching; ``mode="wave"`` forces that path for any family.
 
 On a multi-device mesh, pass ``mesh=``: parameters and the cache are placed
 with the serve shardings from ``parallel.sharding`` (mode="serve": resident
-TP weights, batch-sharded / sequence-split KV) and the jitted functions
-inherit that placement.  Caveat: this sets the sharding module's
-process-global axis sizes (they must be visible when the jits trace), so
-one serving mesh per process — restore via ``set_mesh_axis_sizes`` if the
-process later runs un-meshed work.  On CPU smoke runs the same code
-executes on one device.
+TP weights; the paged pool shards KV heads over ``model`` — block tables
+are request-local, so the pool itself is not batch-shardable) and the
+jitted functions inherit that placement.  Caveat: this sets the sharding
+module's process-global axis sizes (they must be visible when the jits
+trace), so one serving mesh per process — restore via
+``set_mesh_axis_sizes`` if the process later runs un-meshed work.  On CPU
+smoke runs the same code executes on one device.
 """
 from __future__ import annotations
 
@@ -53,9 +77,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.parallel import sharding
+from repro.serving.paged import TRASH_BLOCK, BlockAllocator
 from repro.serving.sampler import SamplerConfig, sample
 
-# Families whose KV cache supports slot-level admission (see module doc).
+# Families whose KV cache supports block-level admission (see module doc).
 CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
 
 
@@ -69,16 +94,29 @@ class Request:
 
 
 @dataclass
+class _Prefilling:
+    """A request mid-admission: its prompt is entering the cache in chunks."""
+    req: Request
+    lane: int
+    budget: int  # decode budget clamped to the cache (fixed at admission)
+    consumed: int = 0  # prompt tokens already prefilled
+
+
+@dataclass
 class EngineStats:
     prefill_tokens: int = 0
+    prefill_chunks: int = 0
     generated_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
     decode_steps: int = 0
     admissions: int = 0
-    # Occupancy: active slots summed over decode steps vs. capacity.
+    # Occupancy: active lanes summed over decode steps vs. lane capacity.
     occupied_slot_steps: int = 0
     slot_steps: int = 0
+    # KV memory: live TOKENS summed over decode steps vs. pool tokens.
+    used_token_steps: int = 0
+    pool_token_steps: int = 0
 
     @property
     def tokens_per_s(self) -> float:
@@ -88,9 +126,23 @@ class EngineStats:
     def slot_occupancy(self) -> float:
         return self.occupied_slot_steps / max(self.slot_steps, 1)
 
+    @property
+    def mean_active_requests(self) -> float:
+        """Concurrent in-decode requests averaged over decode steps."""
+        return self.occupied_slot_steps / max(self.decode_steps, 1)
+
+    @property
+    def block_utilization(self) -> float:
+        """Fraction of the KV pool's TOKEN capacity holding live tokens,
+        averaged over decode steps — the capacity-fragmentation metric
+        paged allocation improves (a stripe engine counts a whole stripe
+        against the pool per request; paging wastes at most one partial
+        block per request)."""
+        return self.used_token_steps / max(self.pool_token_steps, 1)
+
 
 def _bucket(n: int, cap: int) -> int:
-    """Smallest power-of-two >= n (min 8), capped at the cache capacity."""
+    """Smallest power-of-two >= n (min 8), capped at cap."""
     p = 8
     while p < n:
         p *= 2
@@ -102,10 +154,17 @@ class ServingEngine:
                  max_len: int = 256, eos_id: int = 0,
                  sampler: Optional[SamplerConfig] = None,
                  mode: str = "auto", pad_id: int = 0, seed: int = 0,
-                 mesh=None):
+                 mesh=None, block_size: int = 8,
+                 num_blocks: Optional[int] = None,
+                 prefill_chunk: Optional[int] = 32):
         """mode: "auto" (continuous where the family supports it),
         "continuous" (error if unsupported) or "wave" (force the legacy
-        lockstep baseline)."""
+        lockstep baseline).
+
+        block_size / num_blocks / prefill_chunk: paged-KV knobs, see the
+        module docstring.  Defaults give ``max_batch`` stripes' worth of
+        blocks and chunk prompts longer than 32 tokens.
+        """
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
@@ -121,9 +180,12 @@ class ServingEngine:
                 else "wave"
         if mode == "continuous" and cfg.family not in CONTINUOUS_FAMILIES:
             raise ValueError(
-                f"family {cfg.family!r} has no slot-addressable KV cache; "
+                f"family {cfg.family!r} has no block-addressable KV cache; "
                 f"use mode='wave'")
         self.mode = mode
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.prefill_chunk = prefill_chunk
 
         self.params = params
         self._mesh = mesh
@@ -156,13 +218,23 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {len(prompt)} leaves no decode room in a "
                 f"{self.max_len}-token cache")
+        if self.mode == "continuous":
+            worst = self._worst_case_tokens(prompt, max_new_tokens)
+            if self._alloc.blocks_for(worst) > min(
+                    self._alloc.num_blocks, self._alloc.max_blocks_per_slot):
+                raise ValueError(
+                    f"request needs {self._alloc.blocks_for(worst)} KV "
+                    f"blocks; the pool can never satisfy it")
         self._uid += 1
         self._queue.append(Request(self._uid, prompt, max_new_tokens))
         return self._uid
 
     def step(self) -> List[Tuple[int, List[int]]]:
-        """One scheduler iteration: admit queued requests into free slots,
-        then run one jitted masked decode step across all slots.
+        """One scheduler iteration: admit queued requests onto free lanes,
+        run ONE prefill chunk for admitting prompts, then one jitted masked
+        decode step across all lanes — chunked prefill and decode interleave
+        at this granularity, so a long prompt's admission cannot stall
+        in-flight decodes for its whole prefill.
 
         Returns the requests finished this iteration as (uid, tokens).
         """
@@ -171,14 +243,21 @@ class ServingEngine:
                 f"step() requires mode='continuous' (engine is in "
                 f"{self.mode!r} mode); use run()")
         self._admit()
+        self._prefill_step()
         if not self._host_active.any():
             return []
 
+        # Hand each about-to-decode lane the block its next token lands in
+        # (always within the admission reservation, so this cannot fail).
+        for i in np.nonzero(self._host_active)[0]:
+            self._alloc.grow(int(i), self._prefix + int(self._host_pos[i]) + 1)
+        tables = jnp.asarray(self._alloc.block_table())
+
         t0 = time.perf_counter()
         (self._cache, self._logits, self._pos, self._active, self._budget,
-         host_out, self._key) = self._decode_fn(
+         host_out, self._keys) = self._decode_fn(
             self.params, self._cache, self._logits, self._pos, self._active,
-            self._budget, self._key)
+            self._budget, self._keys, tables)
         host = np.asarray(host_out)  # the per-token host sync point
         tok_h, active_h = host[0], host[1].astype(bool)
         self.stats.decode_s += time.perf_counter() - t0
@@ -187,20 +266,23 @@ class ServingEngine:
         self.stats.decode_steps += 1
         self.stats.occupied_slot_steps += int(was.sum())
         self.stats.slot_steps += self.max_batch
+        self.stats.used_token_steps += self._alloc.live_tokens
+        self.stats.pool_token_steps += self._alloc.num_blocks \
+            * self._alloc.block_size
 
         finished: List[Tuple[int, List[int]]] = []
         for i in np.nonzero(was)[0]:
             r = self._slot_req[i]
             r.output.append(int(tok_h[i]))
+            self._host_pos[i] += 1
             self.stats.generated_tokens += 1
             if not active_h[i]:
                 r.done = True
                 finished.append((r.uid, r.output))
                 self._slot_req[i] = None
-        # Freed slots are NOT zeroed here: stale K/V is dead under the
-        # per-row mask and admission overwrites the full slot row, while a
-        # reset would copy the whole cache on donation-less backends.
-        # model.reset_slot exists for callers that need a clean cache.
+                # Blocks return to the pool; the lane's table rows become
+                # trash so its dead-lane writes cannot touch them again.
+                self._alloc.release(int(i))
         self._host_active = active_h
         return finished
 
@@ -209,7 +291,7 @@ class ServingEngine:
         if self.mode != "continuous":
             return self._run_waves()
         results: Dict[int, List[int]] = {}
-        while self._queue or self._host_active.any():
+        while self._queue or self._prefilling or self._host_active.any():
             for uid, toks in self.step():
                 results[uid] = toks
         return results
@@ -217,7 +299,15 @@ class ServingEngine:
     # -- continuous internals ------------------------------------------------
     def _init_continuous(self, donate: bool, seed: int) -> None:
         cfg, B = self.cfg, self.max_batch
-        self._cache = M.init_cache(cfg, B, self.max_len)
+        self._prefix = cfg.num_patches if cfg.family == "vlm" else 0
+        ctx = self.max_len + self._prefix
+        bs = self.block_size
+        table_width = -(-ctx // bs)
+        if self.num_blocks is None:
+            self.num_blocks = B * table_width
+        self._alloc = BlockAllocator(self.num_blocks, bs, B, table_width)
+        # +1 device block: id 0 is the dead-lane trash sink.
+        self._cache = M.init_paged_cache(cfg, self.num_blocks + 1, bs)
         if self._mesh is not None:
             self._cache = self._place_cache(self._mesh, self._cache)
         ldtype = self.params["embed"].dtype
@@ -225,73 +315,152 @@ class ServingEngine:
         self._pos = jnp.zeros((B,), jnp.int32)
         self._active = jnp.zeros((B,), bool)
         self._budget = jnp.zeros((B,), jnp.int32)
-        self._key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
+        self._keys = jnp.zeros((B,) + self._base_key.shape,
+                               self._base_key.dtype)
         self._slot_req: List[Optional[Request]] = [None] * B
+        self._prefilling: List[_Prefilling] = []
         self._host_active = np.zeros(B, bool)
+        self._host_pos = np.zeros(B, np.int64)
 
         sampler, eos_id, pad_id = self.sampler, self.eos_id, self.pad_id
 
         def decode_step(params, cache, last_logits, pos, active, budget,
-                        key):
-            key, sub = jax.random.split(key)
+                        keys, tables):
+            # Inactive lanes still run as masked no-op rows, but a lane
+            # mid-chunked-prefill already OWNS blocks — point dead lanes'
+            # tables at the trash block so their no-op writes cannot clobber
+            # a partially prefilled prompt (or a re-assigned block).
+            tables = jnp.where(active[:, None], tables, TRASH_BLOCK)
+            # Per-lane keys: each request's stream was seeded by fold_in at
+            # admission, so sampling is reproducible per request regardless
+            # of which co-tenants share the batch.
+            splits = jax.vmap(jax.random.split)(keys)  # (B, 2, key)
+            keys, sub = splits[:, 0], splits[:, 1]
             tok = sample(sampler, last_logits, sub, active=active,
                          pad_id=pad_id)
             budget = budget - active.astype(jnp.int32)
             retire = active & ((tok == eos_id) | (budget <= 0))
-            # All slots run the model (a retired/free slot is a masked
-            # no-op lane — the occupancy loss the stats report); the
-            # active mask keeps dead lanes out of MoE expert capacity.
+            # All lanes run the model (a retired/free lane is a masked
+            # no-op — the occupancy loss the stats report); the active
+            # mask keeps dead lanes out of MoE expert capacity.
             logits, cache = M.decode_step(cfg, params, cache, tok[:, None],
-                                          pos, active=active)
+                                          pos, active=active,
+                                          block_tables=tables)
             pos = pos + active.astype(jnp.int32)
             new_active = active & ~retire
             # One packed (2, B) buffer -> a single device->host read per
             # token in the scheduler loop.
             host_out = jnp.stack([tok, new_active.astype(jnp.int32)])
             return (cache, logits[:, 0], pos, new_active, budget, host_out,
-                    key)
+                    keys)
 
         self._decode_fn = jax.jit(
             decode_step,
             donate_argnums=(1, 2, 3, 4, 5, 6) if donate else ())
-        # One jit handles every (group size, bucket) shape combination;
-        # power-of-two buckets keep the number of retraces small.
-        self._prefill_slots = jax.jit(
-            lambda p, c, t, ln, s: M.prefill_slots(cfg, p, c, t, ln, s),
+        # One jit per (first/continuation) handles every (group size,
+        # bucket) shape combination; power-of-two buckets keep the number
+        # of retraces small.
+        self._prefill_first = jax.jit(
+            lambda p, c, t, ln, bt: M.prefill_slots(cfg, p, c, t, ln, bt),
+            donate_argnums=(1,) if donate else ())
+        self._prefill_cont = jax.jit(
+            lambda p, c, t, ln, bt, st: M.prefill_slots(cfg, p, c, t, ln, bt,
+                                                        start=st),
             donate_argnums=(1,) if donate else ())
 
+    def _clamped_budget(self, prompt, max_new_tokens: int) -> int:
+        """Decode budget clamped so the sequence fits the per-request
+        context — the ONE definition the reservation, the device budget
+        and the submit guard all share."""
+        return min(max_new_tokens, self.max_len - len(prompt))
+
+    def _worst_case_tokens(self, prompt, max_new_tokens: int) -> int:
+        """Total cache tokens a request can ever hold (reservation size)."""
+        return self._prefix + len(prompt) \
+            + self._clamped_budget(prompt, max_new_tokens)
+
     def _admit(self) -> None:
-        free = [i for i, r in enumerate(self._slot_req) if r is None]
-        if not self._queue or not free:
+        """Move queued requests onto free lanes, block-granularly: each
+        reserves only its own worst case (prompt + budget), so many short
+        requests can hold lanes alongside one long one."""
+        owned = {s.lane for s in self._prefilling}
+        free = [i for i, r in enumerate(self._slot_req)
+                if r is None and i not in owned]
+        while self._queue and free:
+            r = self._queue[0]
+            if not self._alloc.can_admit(
+                    self._worst_case_tokens(r.prompt, r.max_new_tokens)):
+                break  # FIFO: wait for blocks rather than starve the head
+            lane = free.pop(0)
+            self._alloc.admit(
+                lane, self._worst_case_tokens(r.prompt, r.max_new_tokens))
+            self._prefilling.append(_Prefilling(
+                r, lane, self._clamped_budget(r.prompt, r.max_new_tokens)))
+            self._queue.pop(0)
+            self.stats.admissions += 1
+
+    def _prefill_step(self) -> None:
+        """Run ONE prefill chunk for the current admission cohort."""
+        if not self._prefilling:
             return
-        take = self._queue[:len(free)]
-        del self._queue[:len(take)]
-        slots = np.asarray(free[:len(take)], np.int32)
-        P = _bucket(max(len(r.prompt) for r in take), self.max_len)
-        tokens = np.full((len(take), P), self.pad_id, np.int32)
-        lengths = np.empty(len(take), np.int32)
-        budgets = np.empty(len(take), np.int32)
-        for j, r in enumerate(take):
-            S = len(r.prompt)
-            tokens[j, P - S:] = r.prompt  # left-pad
-            lengths[j] = S
-            budgets[j] = min(r.max_new_tokens, self.max_len - S)
+        # First chunks embed the vlm patch prefix (a different traced
+        # shape), so group first-timers and continuations separately.
+        first = self._prefilling[0].consumed == 0
+        cohort = [s for s in self._prefilling
+                  if (s.consumed == 0) == first]
+        cap = self.prefill_chunk or self.max_len
+        takes = [min(cap, len(s.req.prompt) - s.consumed) for s in cohort]
+        P = _bucket(max(takes), cap)
+        n = len(cohort)
+        tokens = np.full((n, P), self.pad_id, np.int32)
+        lengths = np.empty(n, np.int32)
+        starts = np.empty(n, np.int32)
+        for j, (s, take) in enumerate(zip(cohort, takes)):
+            tokens[j, P - take:] = s.req.prompt[s.consumed:s.consumed + take]
+            lengths[j] = take
+            starts[j] = self._prefix + s.consumed
+            self._alloc.grow(s.lane, self._prefix + s.consumed + take)
+        tables = jnp.asarray(
+            self._alloc.block_table()[[s.lane for s in cohort]])
 
         t0 = time.perf_counter()
-        logits_new, self._cache = self._prefill_slots(
-            self.params, self._cache, jnp.asarray(tokens),
-            jnp.asarray(lengths), jnp.asarray(slots))
-        self._logits = self._logits.at[slots].set(logits_new)
-        self._pos = self._pos.at[slots].set(lengths)
-        self._active = self._active.at[slots].set(True)
-        self._budget = self._budget.at[slots].set(budgets)
+        if first:
+            logits_new, self._cache = self._prefill_first(
+                self.params, self._cache, jnp.asarray(tokens),
+                jnp.asarray(lengths), tables)
+        else:
+            logits_new, self._cache = self._prefill_cont(
+                self.params, self._cache, jnp.asarray(tokens),
+                jnp.asarray(lengths), tables, jnp.asarray(starts))
+
+        done_rows, done = [], []
+        for j, (s, take) in enumerate(zip(cohort, takes)):
+            s.consumed += take
+            if s.consumed == len(s.req.prompt):
+                done_rows.append(j)
+                done.append(s)
+                self._slot_req[s.lane] = s.req
+                self._prefilling.remove(s)
+        if done:
+            rows = jnp.asarray(done_rows)
+            lanes = jnp.asarray([s.lane for s in done])
+            plens = jnp.asarray([len(s.req.prompt) for s in done], jnp.int32)
+            budgets = jnp.asarray([s.budget for s in done], jnp.int32)
+            self._logits = self._logits.at[lanes].set(logits_new[rows])
+            self._pos = self._pos.at[lanes].set(plens)
+            self._active = self._active.at[lanes].set(True)
+            self._budget = self._budget.at[lanes].set(budgets)
+            self._keys = self._keys.at[lanes].set(jnp.stack(
+                [jax.random.fold_in(self._base_key, s.req.uid)
+                 for s in done]))
+            for s in done:
+                self._host_active[s.lane] = True
+                self._host_pos[s.lane] = len(s.req.prompt)
         jax.block_until_ready(self._logits)
         self.stats.prefill_s += time.perf_counter() - t0
-        self.stats.prefill_tokens += int(lengths.sum())
-        self.stats.admissions += len(take)
-        for i, r in zip(slots, take):
-            self._slot_req[int(i)] = r
-        self._host_active[slots] = True
+        self.stats.prefill_tokens += int(sum(takes))
+        self.stats.prefill_chunks += 1
 
     # -- mesh placement ------------------------------------------------------
     def _place_serve(self, mesh, params):
@@ -302,7 +471,8 @@ class ServingEngine:
 
     def _place_cache(self, mesh, cache):
         specs = sharding.cache_specs(
-            self.cfg, cache, sharding._DP_AXES or None, self.max_batch)
+            self.cfg, cache, sharding._DP_AXES or None, self.max_batch,
+            paged=True)
         specs = sharding.sanitize_specs(specs, cache)
         return jax.device_put(cache, sharding.to_shardings(mesh, specs))
 

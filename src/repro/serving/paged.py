@@ -1,0 +1,171 @@
+"""Paged KV-cache block allocator (host side).
+
+The PR 1 engine reserved one contiguous ``max_len`` stripe of KV cache per
+slot, so a single long prompt stranded capacity that many short requests
+could have used — exactly the fragmentation waste the paper's generate-stage
+utilization argument (CC-MEM, §4.2, Fig 6/8) prices into TCO/token and that
+vLLM's PagedAttention removes.  This module is the host half of the paged
+replacement: a free list of fixed-size token *blocks* shared across all
+decode lanes, with a per-lane block table mapping sequence positions to
+blocks.  The device half (gather over the block table) lives in
+``models.layers.attention_decode`` / ``models.model.prefill_slots``.
+
+Two bookkeeping levels, deliberately separate:
+
+  * **allocation** is lazy: a lane holds exactly
+    ``ceil(seq_len / block_size)`` live blocks — blocks are handed out by
+    ``grow`` as the sequence crosses block boundaries and returned by
+    ``release`` when the request retires.  The property suite in
+    ``tests/test_paged_kv.py`` pins this invariant (no double assignment,
+    freed blocks return to the free list, live == sum of rounded lengths);
+  * **reservation** is eager: ``admit`` reserves the request's worst-case
+    block count (prompt + decode budget) up front, so a mid-decode ``grow``
+    can never fail and the engine never has to preempt/swap a running
+    request.  Reservation is a counter, not block ids — short requests
+    reserve only what they can ever touch, which is what lets long and
+    short requests share one pool.
+
+Block id 0 (``TRASH_BLOCK``) is never handed out: the device scatter for
+retired/padded lanes is redirected there, so a freed block can be re-assigned
+to another lane without any risk of a stale lane clobbering it.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+#: Block id reserved as the write sink for dead lanes; never allocated.
+TRASH_BLOCK = 0
+
+
+class BlockAllocator:
+    """Free-list allocator of fixed-size KV token blocks over ``num_slots``
+    decode lanes.
+
+    num_blocks:  usable pool size (ids ``1..num_blocks``; id 0 is trash).
+    block_size:  tokens per block.
+    num_slots:   decode lanes (rows of the block table).
+    max_blocks_per_slot: width of the per-lane block table (the per-request
+        context cap in blocks).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, num_slots: int,
+                 max_blocks_per_slot: int):
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError("num_blocks and block_size must be >= 1")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.num_slots = num_slots
+        self.max_blocks_per_slot = max_blocks_per_slot
+        # LIFO free list: recently-freed blocks are reused first, which keeps
+        # the working set of device pages small.
+        self._free: List[int] = list(range(num_blocks, 0, -1))
+        self._blocks: Dict[int, List[int]] = {}  # slot -> owned block ids
+        self._len: Dict[int, int] = {}  # slot -> current sequence length
+        self._reserved: Dict[int, int] = {}  # slot -> worst-case block count
+        self._table = np.zeros((num_slots, max_blocks_per_slot), np.int32)
+
+    # -- queries -------------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        """Blocks not currently assigned to any lane."""
+        return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def live_tokens(self) -> int:
+        """Tokens actually cached across all lanes (<= live_blocks * bs;
+        the gap is the sub-block fragmentation paging cannot remove)."""
+        return sum(self._len.values())
+
+    @property
+    def reserved_blocks(self) -> int:
+        return sum(self._reserved.values())
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def seq_len(self, slot: int) -> int:
+        return self._len.get(slot, 0)
+
+    def can_admit(self, tokens: int) -> bool:
+        """True if a request that may grow to ``tokens`` total cache tokens
+        fits: its worst-case blocks on top of every live lane's outstanding
+        reservation."""
+        need = self.blocks_for(tokens)
+        return (need <= self.max_blocks_per_slot
+                and self.reserved_blocks + need <= self.num_blocks)
+
+    def block_table(self) -> np.ndarray:
+        """(num_slots, max_blocks_per_slot) int32; unallocated entries are
+        TRASH_BLOCK.  Returns the live array — callers must not mutate it."""
+        return self._table
+
+    # -- lifecycle -----------------------------------------------------------
+    def admit(self, slot: int, tokens: int) -> None:
+        """Reserve worst-case capacity for a request on a free lane."""
+        if slot in self._reserved:
+            raise ValueError(f"slot {slot} already admitted")
+        if not self.can_admit(tokens):
+            raise ValueError(
+                f"cannot reserve {self.blocks_for(tokens)} blocks "
+                f"({self.reserved_blocks}/{self.num_blocks} already reserved)")
+        self._reserved[slot] = self.blocks_for(tokens)
+        self._blocks[slot] = []
+        self._len[slot] = 0
+
+    def grow(self, slot: int, seq_len: int) -> List[int]:
+        """Extend ``slot`` to hold ``seq_len`` tokens; returns the newly
+        assigned block ids (possibly empty).  Never exceeds the admission
+        reservation, so it can never run the pool dry."""
+        if slot not in self._reserved:
+            raise ValueError(f"slot {slot} not admitted")
+        if seq_len < self._len[slot]:
+            raise ValueError(
+                f"slot {slot} cannot shrink ({self._len[slot]} -> {seq_len})")
+        need = self.blocks_for(seq_len)
+        if need > self._reserved[slot]:
+            raise ValueError(
+                f"slot {slot} would exceed its reservation "
+                f"({need} > {self._reserved[slot]} blocks)")
+        owned = self._blocks[slot]
+        new: List[int] = []
+        while len(owned) < need:
+            b = self._free.pop()  # cannot fail: reservation bounds demand
+            self._table[slot, len(owned)] = b
+            owned.append(b)
+            new.append(b)
+        self._len[slot] = seq_len
+        return new
+
+    def release(self, slot: int) -> List[int]:
+        """Retire a request: return its blocks to the free list and drop its
+        reservation.  Returns the freed block ids."""
+        if slot not in self._reserved:
+            raise ValueError(f"slot {slot} not admitted")
+        freed = self._blocks.pop(slot)
+        self._free.extend(freed)
+        self._table[slot] = TRASH_BLOCK
+        del self._len[slot]
+        del self._reserved[slot]
+        return freed
+
+    # -- invariants (exercised by tests/test_paged_kv.py) --------------------
+    def check_invariants(self) -> None:
+        owned = [b for blocks in self._blocks.values() for b in blocks]
+        assert len(owned) == len(set(owned)), "block double-assigned"
+        assert not set(owned) & set(self._free), "live block on free list"
+        assert TRASH_BLOCK not in owned and TRASH_BLOCK not in self._free
+        assert len(owned) + len(self._free) == self.num_blocks, "block leaked"
+        expect = sum(self.blocks_for(n) for n in self._len.values())
+        assert self.live_blocks == expect, (
+            f"live blocks {self.live_blocks} != sum(ceil(len/bs)) {expect}")
+        for slot, blocks in self._blocks.items():
+            assert len(blocks) <= self._reserved[slot]
+            row = self._table[slot]
+            assert list(row[:len(blocks)]) == blocks
+            assert (row[len(blocks):] == TRASH_BLOCK).all()

@@ -17,6 +17,12 @@ def sample(cfg: SamplerConfig, logits: jnp.ndarray, key,
            active: jnp.ndarray = None, pad_id: int = 0) -> jnp.ndarray:
     """logits: (B, V) -> token ids (B,).
 
+    ``key``: a single PRNG key shared by the batch, OR a (B,)-batched key
+    array (one per row).  Per-row keys make stochastic sampling
+    reproducible PER REQUEST: the continuous-batching engine folds each
+    request's uid into its own key stream, so a request's sampled tokens
+    do not depend on which co-tenants happen to share its decode batch.
+
     ``active``: optional (B,) bool mask — rows where it is False emit
     ``pad_id`` instead of a sampled token, so a finished (retired)
     continuous-batching slot is a no-op inside the jitted decode step.
@@ -28,7 +34,13 @@ def sample(cfg: SamplerConfig, logits: jnp.ndarray, key,
         if cfg.top_k > 0:
             kth = jax.lax.top_k(lg, cfg.top_k)[0][..., -1:]
             lg = jnp.where(lg < kth, -1e30, lg)
-        tok = jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+        batched = getattr(key, "ndim", 1) > 1
+        if batched:
+            tok = jax.vmap(
+                lambda k, l: jax.random.categorical(k, l))(key, lg)
+            tok = tok.astype(jnp.int32)
+        else:
+            tok = jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
     if active is not None:
         tok = jnp.where(active, tok, jnp.int32(pad_id))
     return tok

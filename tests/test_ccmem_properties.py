@@ -1,0 +1,36 @@
+"""CC-MEM property sweeps (needs hypothesis; deterministic pins stay in
+test_ccmem.py so they run everywhere)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ccmem import AccessStream, CCMEMConfig, simulate
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.builds(
+    AccessStream,
+    words=st.integers(1, 5000),
+    kind=st.sampled_from(["burst", "strided", "random"]),
+    burst_len=st.integers(1, 2048),
+    sparsity=st.sampled_from([0.0, 0.2, 0.6, 0.9])),
+    min_size=1, max_size=6),
+    st.integers(0, 10_000))
+def test_served_words_never_exceed_total(streams, seed):
+    """Property form of the served_words regression: for ANY stream mix,
+    words served is positive and bounded by the words that exist."""
+    r = simulate(streams, CCMEMConfig(num_bank_groups=4), seed=seed)
+    total = sum(s.words for s in streams)
+    assert 0 < r["served_words"] <= total
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 10_000))
+def test_cycles_monotone_in_streams(n_streams, seed):
+    cfg = CCMEMConfig(num_bank_groups=8)
+    streams = [AccessStream(words=1 << 12, kind="burst")
+               for _ in range(n_streams)]
+    r = simulate(streams, cfg, seed=seed)
+    assert r["cycles"] >= r["peak_cycles"] * 0.99
+    assert 0.0 < r["achieved_fraction"] <= 1.0

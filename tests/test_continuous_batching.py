@@ -1,9 +1,11 @@
-"""Continuous batching: slot admission, per-row decode, greedy bit-identity.
+"""Continuous batching: paged KV admission, per-row decode, bit-identity.
 
 Acceptance: >= 2 concurrent requests with different prompt lengths AND
-different completion lengths decode through one shared jitted masked step,
-with per-request outputs bit-identical (greedy) to running each request
-alone through ``model.prefill`` + scalar-position ``model.decode_step``.
+different completion lengths decode through one shared jitted masked step
+over a PAGED (block-table) KV cache, with per-request outputs bit-identical
+(greedy) to running each request alone through ``model.prefill`` +
+scalar-position ``model.decode_step`` — including when prompts are
+prefilled in chunks interleaved with in-flight decodes.
 """
 import jax
 import jax.numpy as jnp
@@ -13,6 +15,7 @@ import pytest
 from repro.configs.base import get_config
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
+from repro.serving.paged import BlockAllocator
 
 MAX_LEN = 32
 
@@ -64,6 +67,80 @@ def test_continuous_bit_identical_to_solo(arch):
     assert eng.stats.decode_steps == max(budgets)
     for uid, p, m in zip(uids, prompts, budgets):
         assert out[uid] == solo_greedy(cfg, params, p, m)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen2-moe-a2.7b",
+                                  "internvl2-26b"])
+@pytest.mark.parametrize("block_size,chunk", [(4, 4), (8, 16)])
+def test_paged_chunked_bit_identical_to_solo(arch, block_size, chunk):
+    """The paged allocator + chunked prefill matrix: long and short prompts
+    share the block pool, prompts longer than ``chunk`` prefill across
+    several interleaved calls — outputs stay bit-identical to solo."""
+    cfg, params = _make(arch)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n)
+               for n in (3, 17, 6, 21)]  # mixed long/short
+    budgets = (5, 3, 4, 6)
+    eng = ServingEngine(cfg, params, max_batch=4, max_len=MAX_LEN, eos_id=-1,
+                        block_size=block_size, prefill_chunk=chunk)
+    uids = [eng.submit(p, max_new_tokens=m) for p, m in zip(prompts, budgets)]
+    out = eng.run()
+    # Long prompts really were chunked (admission interleaves with decode).
+    assert eng.stats.prefill_chunks > 1
+    for uid, p, m in zip(uids, prompts, budgets):
+        assert out[uid] == solo_greedy(cfg, params, p, m)
+    # Everything retired: every block is back on the free list.
+    eng._alloc.check_invariants()
+    assert eng._alloc.live_blocks == 0
+
+
+def test_long_prompt_admitted_mid_decode(tiny):
+    """A long prompt admitted while short requests decode must (a) not stall
+    them — its prefill chunks interleave with their decode steps — and (b)
+    come out bit-identical to its solo run."""
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    short = [rng.integers(1, cfg.vocab_size, size=4) for _ in range(2)]
+    long = rng.integers(1, cfg.vocab_size, size=24)
+    eng = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN, eos_id=-1,
+                        block_size=4, prefill_chunk=4)
+    u_short = [eng.submit(p, max_new_tokens=8) for p in short]
+    done = {}
+    for _ in range(2):  # shorts are mid-decode...
+        for uid, toks in eng.step():
+            done[uid] = toks
+    steps_before = eng.stats.decode_steps
+    assert steps_before == 2
+    u_long = eng.submit(long, max_new_tokens=3)  # ...when the long arrives
+    while len(done) < 3:
+        for uid, toks in eng.step():
+            done[uid] = toks
+    # The shorts kept decoding during the long prompt's 6 prefill chunks:
+    # they finish their 8 tokens after 8 decode steps, strictly before the
+    # long request (6 chunks + 3 decode steps from its admission).
+    assert done[u_long] == solo_greedy(cfg, params, long, 3)
+    for uid, p in zip(u_short, short):
+        assert done[uid] == solo_greedy(cfg, params, p, 8)
+    assert eng.stats.prefill_chunks >= 1 + 6  # shorts together + 24/4 chunks
+
+
+def test_block_pool_admits_beyond_stripe_capacity(tiny):
+    """Block-granular admission: with a pool worth 2 full stripes, THREE
+    short requests run concurrently because each reserves only its own
+    blocks — the fragmentation win over per-slot striping."""
+    cfg, params = tiny
+    rng = np.random.default_rng(4)
+    # 2 stripes of MAX_LEN=32 tokens = 16 blocks of 4; each request needs
+    # ceil((4 + 6)/4) = 3 blocks, so 3 requests fit with room to spare.
+    prompts = [rng.integers(1, cfg.vocab_size, size=4) for _ in range(3)]
+    eng = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN, eos_id=-1,
+                        block_size=4, num_blocks=2 * (MAX_LEN // 4))
+    uids = [eng.submit(p, max_new_tokens=6) for p in prompts]
+    out = eng.run()
+    assert eng.stats.decode_steps == 6  # all three decoded concurrently
+    assert eng.stats.mean_active_requests == 3.0
+    for uid, p in zip(uids, prompts):
+        assert out[uid] == solo_greedy(cfg, params, p, 6)
 
 
 def test_slot_freed_by_eos_is_reused(tiny):
@@ -121,35 +198,51 @@ def test_step_api_incremental(tiny):
     assert len(finished[u_short]) == 2 and len(finished[u_long]) == 5
 
 
-def test_prefill_slots_and_reset_slot_primitives(tiny):
-    """Slot-level cache ops: targeted write, bit-identical logits, reset."""
+def test_prefill_slots_paged_primitives(tiny):
+    """Block-level cache ops: the prefill writes land ONLY in the blocks
+    the row's table names, in position order, bit-identical to the dense
+    reference cache."""
     cfg, params = tiny
     prompt = np.arange(1, 8)  # length 7, bucket-padded to 8
-    cache = M.init_cache(cfg, 2, MAX_LEN)
+    bs = 4
+    alloc = BlockAllocator(num_blocks=8, block_size=bs, num_slots=2,
+                           max_blocks_per_slot=MAX_LEN // bs)
+    cache = M.init_paged_cache(cfg, alloc.num_blocks + 1, bs)
+    alloc.admit(1, len(prompt) + 4)
+    alloc.grow(1, len(prompt))  # 2 blocks: positions 0..3, 4..6
     P = 8
     toks = np.zeros((1, P), np.int32)
     toks[0, P - len(prompt):] = prompt  # left-pad
+    tables = jnp.asarray(alloc.block_table()[[1]])
     logits, cache = M.prefill_slots(
         cfg, params, cache, jnp.asarray(toks),
-        jnp.asarray([len(prompt)], jnp.int32), jnp.asarray([1], jnp.int32))
+        jnp.asarray([len(prompt)], jnp.int32), tables)
 
-    # Slot 0 untouched, slot 1 populated at offsets [0, len).
-    assert not np.any(np.asarray(cache["k"][:, 0]))
-    assert np.any(np.asarray(cache["k"][:, 1, :len(prompt)]))
-    assert not np.any(np.asarray(cache["k"][:, 1, P:]))
+    owned = list(np.asarray(alloc.block_table()[1, :2]))
+    k = np.asarray(cache["k"], np.float32)
+    # Only the two owned blocks hold data: trash (0) and the free pool are
+    # untouched (junk-tail writes are dropped, not spilled).
+    for b in range(alloc.num_blocks + 1):
+        assert np.any(k[:, b]) == (b in owned), f"block {b}"
 
-    # Left-pad-masked prefill is bit-identical to the unpadded prefill.
+    # Block-gathered K == the dense reference cache, position for position,
+    # and the last-token logits are bit-identical to unpadded prefill.
     ref_logits, ref_cache = M.prefill(
         cfg, params, {"tokens": jnp.asarray(prompt[None], jnp.int32)},
         max_len=MAX_LEN)
     np.testing.assert_array_equal(np.asarray(logits[0]),
                                   np.asarray(ref_logits[0]))
+    gathered = k[:, owned].reshape(k.shape[0], 2 * bs, *k.shape[3:])
     np.testing.assert_array_equal(
-        np.asarray(cache["k"][:, 1, :len(prompt)]),
-        np.asarray(ref_cache["k"][:, 0, :len(prompt)]))
+        gathered[:, :len(prompt)],
+        np.asarray(ref_cache["k"][:, 0, :len(prompt)], np.float32))
 
-    cache = M.reset_slot(cache, 1)
-    assert not np.any(np.asarray(cache["k"])), "reset_slot must zero the row"
+    # Release: blocks return to the pool, table row points at trash.
+    freed = alloc.release(1)
+    assert sorted(freed) == sorted(owned)
+    assert alloc.live_blocks == 0
+    assert (alloc.block_table() == 0).all()
+    alloc.check_invariants()
 
 
 def test_moe_dispatch_valid_mask_frees_capacity():
@@ -193,8 +286,9 @@ def test_engine_threads_serve_shardings(tiny):
         sh.set_mesh_axis_sizes(_NoMesh())
 
 
-def test_decode_step_vector_positions(tiny):
-    """Rows at different offsets through one decode_step == scalar decode."""
+def test_decode_step_vector_positions_paged(tiny):
+    """Rows at different offsets through one block-table decode_step ==
+    scalar decode on the dense reference cache."""
     cfg, params = tiny
     pa, pb = np.arange(1, 7), np.arange(2, 12)  # lengths 6 and 10
 
@@ -210,16 +304,26 @@ def test_decode_step_vector_positions(tiny):
     ta, la = solo_next(pa)
     tb, lb = solo_next(pb)
 
-    cache = M.init_cache(cfg, 2, MAX_LEN)
+    bs = 8
+    alloc = BlockAllocator(num_blocks=8, block_size=bs, num_slots=2,
+                           max_blocks_per_slot=MAX_LEN // bs)
+    cache = M.init_paged_cache(cfg, alloc.num_blocks + 1, bs)
+    alloc.admit(0, 6 + 1)
+    alloc.admit(1, 10 + 1)
+    alloc.grow(0, 6)
+    alloc.grow(1, 10)
     toks = np.zeros((2, 16), np.int32)
     toks[0, 16 - 6:] = pa
     toks[1, 16 - 10:] = pb
     logits, cache = M.prefill_slots(
         cfg, params, cache, jnp.asarray(toks),
-        jnp.asarray([6, 10], jnp.int32), jnp.asarray([0, 1], jnp.int32))
+        jnp.asarray([6, 10], jnp.int32), jnp.asarray(alloc.block_table()))
     t = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     assert (int(t[0]), int(t[1])) == (ta, tb)
+    alloc.grow(0, 7)
+    alloc.grow(1, 11)
     logits2, _ = M.decode_step(cfg, params, cache, t[:, None],
-                               jnp.asarray([6, 10], jnp.int32))
+                               jnp.asarray([6, 10], jnp.int32),
+                               block_tables=jnp.asarray(alloc.block_table()))
     np.testing.assert_array_equal(np.asarray(logits2[:, 0]),
                                   np.stack([la, lb]))

@@ -1,0 +1,157 @@
+"""Paged KV block allocator properties (needs hypothesis).
+
+Random submit/decode/retire traces against ``serving.paged.BlockAllocator``
+pin the invariants the serving engine leans on:
+
+  * no block is ever assigned to two lanes at once;
+  * released blocks return to the free list (nothing leaks);
+  * live-block count always equals the sum of per-lane sequence lengths
+    rounded up to block size (allocation is exactly lazy);
+  * a reservation made at admission can always be grown into — ``grow``
+    never runs the pool dry mid-decode.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paged import TRASH_BLOCK, BlockAllocator
+
+
+def _expected_live(alloc, lens):
+    return sum(-(-n // alloc.block_size) for n in lens.values())
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_random_traces_preserve_invariants(data):
+    """Drive a random admit/grow/release trace; check every invariant after
+    every operation."""
+    num_blocks = data.draw(st.integers(2, 40), label="num_blocks")
+    bs = data.draw(st.integers(1, 8), label="block_size")
+    num_slots = data.draw(st.integers(1, 6), label="num_slots")
+    width = data.draw(st.integers(1, 12), label="table_width")
+    alloc = BlockAllocator(num_blocks, bs, num_slots, width)
+
+    lens = {}      # slot -> current seq len (mirror of the allocator)
+    reserved = {}  # slot -> reserved token budget
+    for _ in range(data.draw(st.integers(1, 40), label="n_ops")):
+        op = data.draw(st.sampled_from(["admit", "grow", "release"]))
+        if op == "admit":
+            free_slots = [s for s in range(num_slots) if s not in lens]
+            if not free_slots:
+                continue
+            slot = data.draw(st.sampled_from(free_slots))
+            tokens = data.draw(st.integers(1, width * bs), label="tokens")
+            if alloc.can_admit(tokens):
+                alloc.admit(slot, tokens)
+                lens[slot] = 0
+                reserved[slot] = tokens
+            else:
+                with pytest.raises(ValueError):
+                    alloc.admit(slot, tokens)
+        elif op == "grow" and lens:
+            slot = data.draw(st.sampled_from(sorted(lens)))
+            # Decode-style growth: anywhere up to the reservation.
+            new_len = data.draw(
+                st.integers(lens[slot], reserved[slot]), label="new_len")
+            fresh = alloc.grow(slot, new_len)
+            lens[slot] = new_len
+            assert all(b != TRASH_BLOCK for b in fresh)
+        elif op == "release" and lens:
+            slot = data.draw(st.sampled_from(sorted(lens)))
+            freed = alloc.release(slot)
+            assert len(freed) == -(-lens[slot] // bs)
+            del lens[slot]
+            del reserved[slot]
+        alloc.check_invariants()
+        assert alloc.live_blocks == _expected_live(alloc, lens)
+        assert alloc.num_free == num_blocks - alloc.live_blocks
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 10_000))
+def test_grow_within_reservation_never_fails(bs, seed):
+    """Admission guarantees: once admitted, every lane can grow to its full
+    reservation even when the pool is otherwise fully reserved."""
+    rng = np.random.default_rng(seed)
+    num_slots, width = 4, 8
+    alloc = BlockAllocator(num_blocks=num_slots * width, block_size=bs,
+                           num_slots=num_slots, max_blocks_per_slot=width)
+    budgets = {}
+    for slot in range(num_slots):
+        tokens = int(rng.integers(1, width * bs + 1))
+        if alloc.can_admit(tokens):
+            alloc.admit(slot, tokens)
+            budgets[slot] = tokens
+    # Interleave single-token growth across lanes (decode order is
+    # arbitrary); nothing may ever raise.
+    heads = {s: 0 for s in budgets}
+    while any(heads[s] < budgets[s] for s in budgets):
+        live = [s for s in budgets if heads[s] < budgets[s]]
+        s = live[int(rng.integers(len(live)))]
+        heads[s] += 1
+        alloc.grow(s, heads[s])
+        alloc.check_invariants()
+    for s in budgets:
+        alloc.release(s)
+    alloc.check_invariants()
+    assert alloc.live_blocks == 0 and alloc.num_free == alloc.num_blocks
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.lists(st.integers(1, 30), min_size=1,
+                                   max_size=12))
+def test_block_table_rows_match_position_order(bs, lens):
+    """The table maps position p to row blocks[p // bs]: entries appear in
+    allocation order, unallocated tail stays trash."""
+    width = -(-max(lens) // bs)
+    alloc = BlockAllocator(num_blocks=sum(-(-n // bs) for n in lens),
+                           block_size=bs, num_slots=len(lens),
+                           max_blocks_per_slot=width)
+    for slot, n in enumerate(lens):
+        alloc.admit(slot, n)
+        alloc.grow(slot, n)
+    table = alloc.block_table()
+    seen = set()
+    for slot, n in enumerate(lens):
+        blocks = table[slot, :-(-n // bs)]
+        assert TRASH_BLOCK not in blocks
+        assert not (set(blocks.tolist()) & seen), "row shares a block"
+        seen |= set(blocks.tolist())
+        assert (table[slot, -(-n // bs):] == TRASH_BLOCK).all()
+    alloc.check_invariants()
+
+
+def test_reservation_blocks_oversubscription():
+    """can_admit prices the worst case: a pool of 4 blocks holds two
+    2-block requests but not a third, until one retires."""
+    alloc = BlockAllocator(num_blocks=4, block_size=4, num_slots=3,
+                           max_blocks_per_slot=4)
+    assert alloc.can_admit(8)
+    alloc.admit(0, 8)
+    alloc.admit(1, 8)
+    assert not alloc.can_admit(1)  # fully reserved though nothing is live
+    with pytest.raises(ValueError):
+        alloc.admit(2, 1)
+    alloc.grow(0, 3)  # lazy: one live block, reservation unchanged
+    assert alloc.live_blocks == 1
+    alloc.release(0)
+    assert alloc.can_admit(8)
+
+
+def test_shrink_and_overgrow_rejected():
+    alloc = BlockAllocator(num_blocks=4, block_size=2, num_slots=1,
+                           max_blocks_per_slot=4)
+    alloc.admit(0, 4)
+    alloc.grow(0, 3)
+    with pytest.raises(ValueError):
+        alloc.grow(0, 2)  # sequences cannot shrink
+    with pytest.raises(ValueError):
+        alloc.grow(0, 5)  # beyond the admission reservation
+    with pytest.raises(ValueError):
+        alloc.admit(0, 1)  # double admit
+    alloc.release(0)
+    with pytest.raises(ValueError):
+        alloc.release(0)  # double release

@@ -105,8 +105,26 @@ def test_wave_mode_forced_matches_continuous_greedy(tiny):
 def test_continuous_mode_rejects_recurrent_families():
     cfg = get_config("mamba2-1.3b").reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="slot-addressable"):
+    with pytest.raises(ValueError, match="block-addressable"):
         ServingEngine(cfg, params, mode="continuous")
+
+
+def test_stochastic_sampling_reproducible_per_request(tiny):
+    """Sampling keys are folded per request uid, so a request's stochastic
+    output does not depend on which co-tenants share its decode batch."""
+    cfg, params = tiny
+    prompt = np.arange(1, 9)
+    sam = SamplerConfig(temperature=0.8, top_k=20)
+    solo = ServingEngine(cfg, params, max_batch=2, max_len=32, eos_id=-1,
+                         sampler=sam, seed=7)
+    u = solo.submit(prompt, max_new_tokens=6)
+    alone = solo.run()[u]
+
+    shared = ServingEngine(cfg, params, max_batch=2, max_len=32, eos_id=-1,
+                           sampler=sam, seed=7)
+    u1 = shared.submit(prompt, max_new_tokens=6)  # same uid (first submit)
+    shared.submit(np.arange(3, 10), max_new_tokens=6)
+    assert shared.run()[u1] == alone
 
 
 def test_submit_rejects_overlong_prompt(tiny):
