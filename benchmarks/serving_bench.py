@@ -1,24 +1,41 @@
-"""Serving engine: paged KV + chunked prefill vs slot stripes vs waves.
+"""Serving engine: paged KV + prefix caching + preemption vs slots vs waves.
 
-Runs the same multi-tenant trace (mixed long/short prompts, mixed
-completion budgets) through three scheduler configurations of
-``serving.engine.ServingEngine`` on a tiny CPU config:
+Two multi-tenant traces through ``serving.engine.ServingEngine`` on a tiny
+CPU config:
 
-  * ``wave``  — the seed's lockstep wave batcher (baseline of PR 1);
-  * ``slot``  — continuous batching with PR 1's reservation semantics:
-    ``block_size = max_len`` makes every request reserve one full stripe,
-    so concurrency is lanes-bound exactly like the slot engine;
-  * ``paged`` — small blocks + chunked prefill on the SAME KV token budget
-    but more lanes: requests reserve only their own worst case, so more of
-    them share the pool concurrently.
+1. MIXED trace (long/short prompts, mixed budgets) through three scheduler
+   configurations:
+     * ``wave``  — the seed's lockstep wave batcher (baseline of PR 1);
+     * ``slot``  — continuous batching with stripe-equivalent blocks
+       (``block_size = max_len``: every request holds one full stripe);
+     * ``paged`` — small blocks + chunked prefill on the SAME KV token
+       budget but more lanes.
+   Greedy outputs are asserted identical between slot and paged.
 
-Reported: decode tokens/s, lane occupancy, mean concurrent requests and KV
-block utilization — the generate-stage utilization gap the paper's
-batching analysis (§4.2, Fig 6/8) prices into TCO/token.  Greedy outputs
-are asserted identical between slot and paged so the speedup is not bought
-with a correctness change.
+2. SHARED-PREFIX trace (one system prompt + short unique tails — the
+   dominant traffic shape at "millions of users" scale) through the paged
+   engine with the prefix cache OFF vs ON at the SAME ``num_blocks``:
+   blocks holding the shared prompt are ref-counted and shared, so
+   admission packs >= 1.2x more concurrent requests into the same pool and
+   skips the shared prefill compute (reported as the prefix hit-rate).
+   Outputs are asserted bit-identical ON vs OFF.
+
+3. PREEMPTION probe: the same requests through an over-committed pool
+   (optimistic admission, no reservation) vs an ample one — preempted
+   requests are re-queued and recomputed, and their final outputs are
+   asserted identical to the unpressured run.
+
+Reported: decode tokens/s, lane occupancy, mean concurrent requests, KV
+token utilization (can exceed 1.0 under sharing — lanes serve more context
+than the pool stores) and prefix hit-rate — the generate-stage utilization
+gaps the paper's batching analysis (§4.2, Fig 6/8) prices into TCO/token.
+
+Run directly (``--smoke`` keeps it CI-sized):
+  PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import numpy as np
@@ -29,28 +46,32 @@ from repro.models import model as M
 from repro.serving.engine import EngineStats, ServingEngine
 
 ARCH = "tinyllama-1.1b"
-N_REQUESTS = 16
 MAX_LEN = 64
-# One KV memory budget for both continuous modes: 4 stripes' worth.
+# One KV memory budget for the wave/slot/paged comparison: 4 stripes' worth.
 KV_BUDGET_TOKENS = 4 * MAX_LEN
-MODES = {
-    # mode -> ServingEngine kwargs
-    "wave": dict(mode="wave", max_batch=4),
-    "slot": dict(mode="continuous", max_batch=4, block_size=MAX_LEN,
-                 num_blocks=KV_BUDGET_TOKENS // MAX_LEN, prefill_chunk=None),
-    # 6 lanes on the same 256-token pool: memory admits ~8 short requests
-    # but 6 lanes balance per-step lane cost vs concurrency on CPU.
-    "paged": dict(mode="continuous", max_batch=6, block_size=8,
-                  num_blocks=KV_BUDGET_TOKENS // 8, prefill_chunk=16),
-}
 
 
-def _trace(cfg, seed=0):
+def _modes(n_requests):
+    return {
+        # mode -> ServingEngine kwargs
+        "wave": dict(mode="wave", max_batch=4),
+        "slot": dict(mode="continuous", max_batch=4, block_size=MAX_LEN,
+                     num_blocks=KV_BUDGET_TOKENS // MAX_LEN,
+                     prefill_chunk=None),
+        # 6 lanes on the same 256-token pool: memory admits ~8 short
+        # requests but 6 lanes balance per-step lane cost vs concurrency
+        # on CPU.
+        "paged": dict(mode="continuous", max_batch=6, block_size=8,
+                      num_blocks=KV_BUDGET_TOKENS // 8, prefill_chunk=16),
+    }
+
+
+def _mixed_trace(cfg, n_requests, seed=0):
     """Mixed long/short prompts: the long ones are what strand stripe
     capacity under slot reservation."""
     rng = np.random.default_rng(seed)
     reqs = []
-    for i in range(N_REQUESTS):
+    for i in range(n_requests):
         long = i % 4 == 0
         plen = int(rng.integers(33, 48)) if long else int(rng.integers(4, 17))
         reqs.append((rng.integers(1, cfg.vocab_size, size=plen),
@@ -58,10 +79,25 @@ def _trace(cfg, seed=0):
     return reqs
 
 
+def _shared_trace(cfg, n_requests, seed=1):
+    """One 32-token system prompt + short unique tails + mixed budgets."""
+    rng = np.random.default_rng(seed)
+    system = rng.integers(1, cfg.vocab_size, size=32)
+    reqs = []
+    for _ in range(n_requests):
+        tail = rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(4, 9)))
+        reqs.append((np.concatenate([system, tail]),
+                     int(rng.integers(6, 11))))
+    return reqs
+
+
 def _run_mode(cfg, params, reqs, kwargs):
     eng = ServingEngine(cfg, params, max_len=MAX_LEN, eos_id=-1, **kwargs)
     # Warm-up pass compiles the prefill buckets and the decode step so the
-    # measured pass times steady-state scheduling, not XLA compiles.
+    # measured pass times steady-state scheduling, not XLA compiles.  (It
+    # also warms the prefix-cache LRU pool, which is exactly the steady
+    # state a long-running server sits in.)
     for p, m in reqs:
         eng.submit(p, max_new_tokens=m)
     eng.run()
@@ -73,13 +109,16 @@ def _run_mode(cfg, params, reqs, kwargs):
     return eng.stats, results
 
 
-def run() -> list[Row]:
+def run(smoke: bool = False) -> list[Row]:
+    n_requests = 6 if smoke else 16
     cfg = get_config(ARCH).reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    reqs = _trace(cfg)
     rows: list[Row] = []
+
+    # -- 1. mixed trace: wave vs slot vs paged -------------------------------
+    reqs = _mixed_trace(cfg, n_requests)
     stats, outs = {}, {}
-    for mode, kwargs in MODES.items():
+    for mode, kwargs in _modes(n_requests).items():
         s, out = _run_mode(cfg, params, reqs, kwargs)
         stats[mode], outs[mode] = s, out
         rows.append((f"serving/{mode}/tokens_per_s", s.decode_s * 1e6,
@@ -99,9 +138,59 @@ def run() -> list[Row]:
                  f"concurrency={stats['paged'].mean_active_requests / max(stats['slot'].mean_active_requests, 1e-9):.2f}x"))
     rows.append(("serving/continuous_vs_wave", 0.0,
                  f"speedup={stats['paged'].tokens_per_s / max(stats['wave'].tokens_per_s, 1e-9):.2f}x"))
+
+    # -- 2. shared-prefix trace: prefix cache off vs on, same pool ----------
+    shared = _shared_trace(cfg, n_requests)
+    pool = dict(mode="continuous", max_batch=6, block_size=8,
+                num_blocks=16, prefill_chunk=16)
+    s_off, out_off = _run_mode(cfg, params, shared,
+                               dict(pool, prefix_cache=False))
+    s_on, out_on = _run_mode(cfg, params, shared,
+                             dict(pool, prefix_cache=True))
+    assert out_on == out_off, "prefix caching changed greedy outputs"
+    conc = s_on.mean_active_requests / max(s_off.mean_active_requests, 1e-9)
+    rows.append(("serving/prefix_cache/hit_rate", 0.0,
+                 f"hit_rate={s_on.prefix_hit_rate:.2f} "
+                 f"cached_tok={s_on.cached_prompt_tokens}"))
+    rows.append(("serving/prefix_cache/concurrency", 0.0,
+                 f"concurrent={s_on.mean_active_requests:.2f} "
+                 f"vs_nocache={conc:.2f}x"))
+    rows.append(("serving/prefix_cache/utilization", 0.0,
+                 f"logical_util={s_on.block_utilization:.2f} "
+                 f"(>1.0 = sharing serves more context than the pool stores)"))
+    rows.append(("serving/prefix_cache/tokens_per_s", 0.0,
+                 f"tok_s={s_on.tokens_per_s:.1f} "
+                 f"vs_nocache={s_on.tokens_per_s / max(s_off.tokens_per_s, 1e-9):.2f}x"))
+    assert s_on.prefix_hit_rate > 0.5, (
+        f"shared-prefix trace should mostly hit ({s_on.prefix_hit_rate:.2f})")
+    assert conc >= 1.2, (
+        f"prefix sharing should admit >=1.2x concurrent requests at the "
+        f"same num_blocks (got {conc:.2f}x)")
+
+    # -- 3. preemption probe: over-committed pool, identical outputs ---------
+    probe = _mixed_trace(cfg, min(n_requests, 6), seed=2)
+    ample = dict(mode="continuous", max_batch=3, block_size=8,
+                 num_blocks=32, prefill_chunk=16)
+    tight = dict(ample, num_blocks=10)
+    _, out_ample = _run_mode(cfg, params, probe, ample)
+    s_tight, out_tight = _run_mode(cfg, params, probe, tight)
+    assert s_tight.preemptions >= 1, "tight pool should force preemption"
+    assert out_tight == out_ample, (
+        "preemption-recompute changed a request's final output")
+    rows.append(("serving/preemption", 0.0,
+                 f"preemptions={s_tight.preemptions} "
+                 f"outputs_identical=True"))
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer requests, same assertions")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
         print(",".join(map(str, r)))
+
+
+if __name__ == "__main__":
+    main()

@@ -42,21 +42,34 @@ def main():
     # 2. Generate through the continuous-batching serving engine: submit
     # requests with different prompt AND completion lengths, then step the
     # scheduler — each step() admits queued work, prefills (at most) one
-    # prompt chunk, and runs one jitted masked decode across all lanes.
+    # prompt chunk, and runs decode_steps jitted masked decode iterations
+    # across all lanes.
     #
-    # KV memory is PAGED: requests share one pool of fixed-size token
-    # blocks through per-lane block tables, reserving only their own
-    # worst case instead of a full max_len stripe.  Knobs:
+    # KV memory is a PAGED, REF-COUNTED block store: requests address one
+    # pool of fixed-size token blocks through per-lane block tables, and
+    # requests sharing a prompt prefix (system prompts, few-shot headers)
+    # SHARE its blocks — admission matches the longest cached prefix, so
+    # prefill only runs the uncached tail, and retired requests' blocks
+    # linger in an LRU pool for future hits.  Admission is optimistic (no
+    # worst-case reservation): if decode growth runs the pool dry, the
+    # youngest request is preempted and recomputed later, bit-identically.
+    # Knobs:
     #   block_size    — tokens per KV block; small (8-16) minimizes
-    #                   fragmentation, >= max_len degenerates to one
+    #                   fragmentation AND sharing granularity (only full
+    #                   blocks are shared); >= max_len degenerates to one
     #                   stripe per request (the old slot engine);
     #   num_blocks    — pool size (default: max_batch stripes' worth);
     #   prefill_chunk — max prompt tokens prefilled per step, so a long
     #                   prompt's admission interleaves with in-flight
     #                   decodes instead of stalling them (None = whole
-    #                   prompt at once).
+    #                   prompt at once);
+    #   prefix_cache  — block sharing on/off (greedy outputs are
+    #                   bit-identical either way);
+    #   decode_steps  — decode iterations per host sync (masked early
+    #                   exit on retirement; amortizes dispatch latency).
     eng = ServingEngine(cfg, params, max_batch=2, max_len=48, eos_id=-1,
-                        block_size=8, prefill_chunk=16,
+                        block_size=8, prefill_chunk=16, prefix_cache=True,
+                        decode_steps=1,
                         sampler=SamplerConfig(temperature=0.7, top_k=20))
     eng.submit(np.arange(1, 9), max_new_tokens=8)
     eng.submit(np.arange(5, 18), max_new_tokens=5)
@@ -70,7 +83,8 @@ def main():
         done = eng.run()
     for uid, toks in sorted(done.items()):
         print(f"generated[{uid}]: {toks}")
-    blocks = f", KV block utilization {eng.stats.block_utilization:.0%}" \
+    blocks = (f", KV utilization {eng.stats.block_utilization:.0%}, "
+              f"prefix hit-rate {eng.stats.prefix_hit_rate:.0%}") \
         if eng.mode == "continuous" else ""
     print(f"decode throughput: {eng.stats.tokens_per_s:.1f} tok/s, "
           f"lane occupancy {eng.stats.slot_occupancy:.0%}{blocks} (CPU)")

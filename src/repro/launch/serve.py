@@ -38,6 +38,19 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="max prompt tokens prefilled per scheduler step "
                          "(0 = whole prompt in one call)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="share KV blocks across requests with a common "
+                         "prompt prefix (--no-prefix-cache disables; "
+                         "retired blocks then free immediately instead of "
+                         "lingering in the LRU pool)")
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="decode iterations per jitted step / host sync "
+                         "(masked early-exit on retirement; >1 amortizes "
+                         "dispatch latency over several tokens)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens to "
+                         "every request (exercises the prefix cache)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -46,23 +59,29 @@ def main():
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     engine = ServingEngine(
         cfg, params, max_batch=args.max_batch,
-        max_len=64 + args.max_new, mode=args.mode, seed=args.seed,
+        max_len=64 + args.shared_prefix + args.max_new, mode=args.mode,
+        seed=args.seed,
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefill_chunk=args.prefill_chunk or None,
+        prefix_cache=args.prefix_cache, decode_steps=args.decode_steps,
         sampler=SamplerConfig(temperature=args.temperature, top_k=50))
 
     rng = np.random.default_rng(args.seed)
+    system = rng.integers(1, cfg.vocab_size, size=args.shared_prefix)
     for i in range(args.requests):
         plen = int(rng.integers(4, 17))
-        prompt = rng.integers(1, cfg.vocab_size, size=plen)
+        prompt = np.concatenate(
+            [system, rng.integers(1, cfg.vocab_size, size=plen)])
         engine.submit(prompt, max_new_tokens=args.max_new)
     results = engine.run()
     for uid, toks in sorted(results.items())[:4]:
         print(f"req {uid}: {toks[:16]}{'...' if len(toks) > 16 else ''}")
     s = engine.stats
-    paged = (f" ({s.prefill_chunks} chunks)", f", KV block utilization "
-             f"{s.block_utilization:.0%}") if engine.mode == "continuous" \
-        else ("", "")
+    paged = (f" ({s.prefill_chunks} chunks, prefix hit-rate "
+             f"{s.prefix_hit_rate:.0%})",
+             f", KV utilization {s.block_utilization:.0%}, "
+             f"{s.preemptions} preemptions") \
+        if engine.mode == "continuous" else ("", "")
     print(f"prefill {s.prefill_tokens} tok in {s.prefill_s:.2f}s{paged[0]}; "
           f"generated {s.generated_tokens} tok in {s.decode_s:.2f}s "
           f"({s.tokens_per_s:.1f} tok/s, mode={engine.mode}, "

@@ -54,12 +54,21 @@ def make_serve_step(cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def shardings_for(cfg: ModelConfig, shape_name: str, mesh):
-    """(in_shardings, out_shardings) pytrees for the step of this shape."""
+    """(in_shardings, out_shardings) pytrees for the step of this shape.
+
+    Axis state is scoped to this call (``sharding.use_axes``), not set
+    process-globally: callers that later trace the step (e.g. dryrun's
+    ``jit(...).lower``) do so under ``sharding.mesh_context(mesh)``, which
+    the constrain_* anchors fall back to."""
     from repro.launch import specs as specs_lib
 
+    with sharding.use_axes(mesh):
+        return _shardings_for(cfg, shape_name, mesh, specs_lib)
+
+
+def _shardings_for(cfg: ModelConfig, shape_name: str, mesh, specs_lib):
     shape = SHAPES[shape_name]
     dp = mesh_lib.data_axes(mesh)
-    sharding.set_mesh_axis_sizes(mesh)
     ins = specs_lib.input_specs(cfg, shape_name)
 
     mode = "train" if shape.kind == "train" else "serve"

@@ -283,8 +283,11 @@ def attention_decode(
         row b's block index j//bs to a pool block (serving.paged hands these
         out; unallocated entries point at the trash block).  The new K/V is
         scattered through the table and the context is gathered back
-        block-by-block — rows only ever touch their own blocks, so long and
-        short sequences share one pool.
+        block-by-block.  With prefix caching, SEVERAL rows' tables may name
+        the same (ref-counted) block: the gather reads it concurrently,
+        which is safe because the host-side store guarantees the scattered
+        write position always lands in a block exclusive to its row (fresh
+        growth or copy-on-write — ``BlockStore.ensure_writable``).
 
     Returns (out (B,1,d), k_cache, v_cache).
     """

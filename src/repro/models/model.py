@@ -424,10 +424,15 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
     """KV cache as a pool of fixed-size token blocks (attention families).
 
     Layout (L, num_blocks, block_size, Hk, hd): block ``b`` holds
-    ``block_size`` consecutive token positions of whichever sequence owns it
-    per the host-side ``serving.paged.BlockAllocator``; block 0 is the trash
-    block dead lanes write into.  ``layers.attention_decode`` and
-    ``prefill_slots`` address it through per-row block tables.
+    ``block_size`` consecutive token positions of whichever sequence(s)
+    reference it per the host-side ``serving.paged.BlockStore`` — with
+    prefix caching a block can appear in SEVERAL lanes' tables at once
+    (ref-counted, read-only sharing), and retired blocks keep their payload
+    while they sit in the store's LRU pool.  Block 0 is the trash block
+    dead lanes write into.  ``layers.attention_decode`` and
+    ``prefill_slots`` address the pool through per-row block tables; writes
+    must target blocks the store reports exclusive (the engine's
+    copy-on-write barrier guarantees this — see ``copy_cache_block``).
     """
     fam = cfg.family
     if fam not in ("dense", "moe", "vlm"):
@@ -443,6 +448,36 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
 
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
     return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+@functools.lru_cache(maxsize=1)
+def _copy_cache_block_fn():
+    # Jitted with the cache DONATED so XLA aliases the pool and the copy is
+    # an in-place one-block scatter — un-jitted `.at[].set` would
+    # materialize a full copy of the whole pool per COW event.  (CPU has no
+    # donation; skip it there to avoid warnings.)
+    donate = (0,) if jax.default_backend() != "cpu" else ()
+
+    def body(cache, src, dst):
+        return dict(cache,
+                    k=cache["k"].at[:, dst].set(cache["k"][:, src]),
+                    v=cache["v"].at[:, dst].set(cache["v"][:, src]))
+
+    return jax.jit(body, donate_argnums=donate)
+
+
+def copy_cache_block(cache: Params, src: int, dst: int) -> Params:
+    """Copy one paged-KV block's payload across all layers (``src -> dst``).
+
+    The copy-on-write half of block sharing: when the host-side
+    ``serving.paged.BlockStore`` swaps a shared block for a fresh exclusive
+    one (``ensure_writable``), the device payload must follow before the
+    lane's next scatter.  Rare by construction — full-block-only sharing
+    puts writes past the shared prefix — but each event must still cost
+    O(block), not O(pool): the copy runs jitted with the pool donated, and
+    src/dst passed as traced scalars (one compile covers every block pair).
+    """
+    return _copy_cache_block_fn()(cache, jnp.int32(src), jnp.int32(dst))
 
 
 def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
@@ -463,10 +498,18 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
     count and the chunk attends to the cached context through a block-table
     gather.
 
+    Prefix caching rides the same ``start`` mechanism: a request admitted
+    with ``cached_len`` prefix tokens already resident (shared blocks
+    matched by ``serving.paged.BlockStore``) enters here as a continuation
+    with ``start = cached_len`` — only the uncached tail is embedded and
+    written, while the shared context (including a cached vlm patch prefix)
+    is gathered read-only through the block table.  The writes land
+    strictly at positions >= ``start``, i.e. past every shared block.
+
     tokens:  (Bn, P) int32, each row's chunk LEFT-padded to P;
     lengths: (Bn,) true token count of this chunk (<= P);
     block_tables: (Bn, T) int32 rows of the paged block table
-        (``serving.paged.BlockAllocator.block_table()``), grown by the
+        (``serving.paged.BlockStore.block_table()``), grown by the
         caller to cover this chunk's writes;
     start:   None => every row starts at cache position 0 (first chunk; the
         vlm patch prefix is embedded and written here); else (Bn,) int32

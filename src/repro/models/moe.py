@@ -67,7 +67,7 @@ def route(cfg: ModelConfig, router_w: jnp.ndarray, x: jnp.ndarray):
 def _num_groups(B: int, S: int) -> int:
     """Dispatch groups: one per data shard so slot assignment stays local."""
     from repro.parallel import sharding as _sh
-    dp = _sh._axes_size_hint(_sh._DP_AXES) or 1
+    dp = _sh._axes_size_hint(_sh.data_axes()) or 1
     if B % dp == 0:
         return dp
     return 1
@@ -147,8 +147,8 @@ def apply_moe(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     # weight sharding), hidden over ``model``.  The gather above is therefore
     # the all-to-all from token-sharding to expert-sharding.
     from repro.parallel import sharding as _sh
-    ep = "data" if _sh._AXES_SIZES.get("data", 1) > 1 else None
-    tp = _sh._TP_AXIS
+    ep = "data" if _sh.axis_size("data") > 1 else None
+    tp = _sh.tp_axis()
     expert_in = _sh.constrain(expert_in, _P(None, ep, None, None))
 
     # Expert FFN (SwiGLU), batched over (group, expert).
@@ -213,13 +213,13 @@ def E_total(cfg: ModelConfig) -> int:
 
 def _manual_axes():
     from repro.parallel import sharding as _sh
-    ep = tuple(a for a in ("pod", "data") if _sh._AXES_SIZES.get(a, 1) > 1)
-    tp = _sh._TP_AXIS if _sh._AXES_SIZES.get(_sh._TP_AXIS or "", 1) > 1 \
-        else None
+    st = _sh.axis_state()
+    ep = tuple(a for a in ("pod", "data") if st.size(a) > 1)
+    tp = st.tp if st.size(st.tp) > 1 else None
     ep_n = 1
     for a in ep:
-        ep_n *= _sh._AXES_SIZES[a]
-    tp_n = _sh._AXES_SIZES.get(tp, 1) if tp else 1
+        ep_n *= st.size(a)
+    tp_n = st.size(tp) if tp else 1
     return ep, ep_n, tp, tp_n
 
 

@@ -18,13 +18,116 @@ dims map to None).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any, Dict, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
+
+
+# ---------------------------------------------------------------------------
+# Mesh-axis state (context-scoped, not process-global)
+#
+# The spec rules and the constrain_* anchors below need to know the active
+# mesh's axis sizes at TRACE time.  This used to be a trio of module globals
+# mutated by ``set_mesh_axis_sizes`` — which meant one serving mesh per
+# process and stale state leaking between components.  The state now lives in
+# a ``ContextVar``:
+#
+#   * ``use_axes(mesh)`` scopes it to a ``with`` block — the serving engine
+#     wraps its jitted-function bodies in this, so every engine traces under
+#     its OWN mesh regardless of what the rest of the process is doing;
+#   * ``set_mesh_axis_sizes(mesh)`` sets it for the current context
+#     (scripts / tests that want ambient state);
+#   * when nothing was set explicitly, readers fall back to the mesh active
+#     in the enclosing jax context (``jax.set_mesh`` / ``with mesh:``), so
+#     ``jit(...).lower()`` under ``mesh_context`` sees the right axes without
+#     any global hand-off.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisState:
+    """Immutable snapshot of a mesh's (axis name, size) pairs."""
+    sizes: Tuple[Tuple[str, int], ...] = ()
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "AxisState":
+        if mesh is None:
+            return cls()
+        try:
+            names, shape = tuple(mesh.axis_names), tuple(mesh.devices.shape)
+        except AttributeError:  # AbstractMesh: no .devices
+            names, shape = tuple(mesh.axis_names), \
+                tuple(mesh.shape[a] for a in mesh.axis_names)
+        return cls(tuple(zip(names, shape)))
+
+    def size(self, name: Optional[str]) -> int:
+        return dict(self.sizes).get(name, 1) if name else 1
+
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        names = [a for a, _ in self.sizes]
+        return tuple(a for a in ("pod", "data") if a in names)
+
+    @property
+    def tp(self) -> Optional[str]:
+        return "model" if any(a == "model" for a, _ in self.sizes) else None
+
+
+#: None = nothing explicitly set in this context -> fall back to the ambient
+#: jax mesh; an explicit (possibly empty) AxisState always wins.
+_AXIS_STATE: "contextvars.ContextVar[Optional[AxisState]]" = \
+    contextvars.ContextVar("mesh_axis_state", default=None)
+
+
+def axis_state() -> AxisState:
+    """The axis state readers resolve: explicit context state, else the
+    enclosing jax mesh context, else empty (no sharding anchors)."""
+    st = _AXIS_STATE.get()
+    if st is not None:
+        return st
+    m = current_mesh()
+    return AxisState.from_mesh(m) if m is not None else AxisState()
+
+
+def set_mesh_axis_sizes(mesh) -> None:
+    """Set the axis state for the CURRENT context (script/test ambient use;
+    pass an empty-axes mesh to clear).  Engine code should prefer the scoped
+    ``use_axes``."""
+    _AXIS_STATE.set(AxisState.from_mesh(mesh))
+
+
+@contextlib.contextmanager
+def use_axes(state) -> Iterator[AxisState]:
+    """Scope the axis state to a ``with`` block.  ``state`` is an AxisState
+    or a mesh (None = explicitly no axes, shadowing any ambient state)."""
+    if not isinstance(state, AxisState):
+        state = AxisState.from_mesh(state)
+    token = _AXIS_STATE.set(state)
+    try:
+        yield state
+    finally:
+        _AXIS_STATE.reset(token)
+
+
+def axis_size(name: Optional[str]) -> int:
+    return axis_state().size(name)
+
+
+def data_axes() -> Tuple[str, ...]:
+    """Batch-sharding axes ("pod"/"data") present in the active mesh."""
+    return axis_state().dp
+
+
+def tp_axis() -> Optional[str]:
+    """The tensor-parallel axis ("model") if the active mesh has one."""
+    return axis_state().tp
 
 
 def _path_str(path) -> str:
@@ -66,7 +169,7 @@ def _param_rule(cfg: ModelConfig, path: str, ndim: int, mode: str,
         return P(*([None] * (ndim - len(spec)) + list(spec)))
 
     leaf = path.rsplit("/", 1)[-1]
-    tp_n = _AXES_SIZES.get(tp, 1)
+    tp_n = axis_size(tp)
     vocab_ok = cfg.vocab_size % tp_n == 0
 
     # Embedding / unembedding. When the vocab doesn't divide the model axis
@@ -107,7 +210,7 @@ def _param_rule(cfg: ModelConfig, path: str, ndim: int, mode: str,
             # all-to-alls carry d/tp-sliced payloads and the up-projection
             # psum runs at h-volume (see moe.apply_moe_manual); otherwise
             # TP splits the hidden dim (plain Megatron-in-expert).
-            ep_n = _AXES_SIZES.get(fsdp, 1)
+            ep_n = axis_size(fsdp)
             d_layout = cfg.moe is not None and ep_n > 1 \
                 and cfg.moe.num_experts % ep_n == 0
             if d_layout:
@@ -177,22 +280,10 @@ def cache_specs(cfg: ModelConfig, cache_shape, dp: Optional[Tuple[str, ...]],
     return jax.tree_util.tree_map_with_path(rule, cache_shape)
 
 
-_AXES_SIZES: Dict[str, int] = {}
-_DP_AXES: Tuple[str, ...] = ()
-_TP_AXIS: Optional[str] = None
-
-
-def set_mesh_axis_sizes(mesh) -> None:
-    global _AXES_SIZES, _DP_AXES, _TP_AXIS
-    _AXES_SIZES = dict(zip(mesh.axis_names, mesh.devices.shape))
-    _DP_AXES = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    _TP_AXIS = "model" if "model" in mesh.axis_names else None
-
-
 def _axes_size_hint(axes: Tuple[str, ...]) -> int:
     n = 1
     for a in axes:
-        n *= _AXES_SIZES.get(a, 1)
+        n *= axis_size(a)
     return n
 
 
@@ -228,7 +319,7 @@ def sanitize_specs(spec_tree, shape_tree) -> Any:
             axes_t = axes if isinstance(axes, tuple) else (axes,)
             size = 1
             for a in axes_t:
-                size *= _AXES_SIZES.get(a, 1)
+                size *= axis_size(a)
             out.append(axes if dims[i] % size == 0 else None)
         return P(*out)
 
@@ -287,39 +378,42 @@ def constrain(x, spec: P):
 SEQUENCE_PARALLEL = True
 
 
-def _seq_shardable(x) -> bool:
+def _seq_shardable(x, st: AxisState) -> bool:
     """Sequence-parallel residuals (Korthikanti et al.): between blocks the
     (B, S, d) stream is sharded over `model` along S, so saved-for-backward
     activations cost 1/tp the HBM and the TP all-reduce becomes a
     reduce-scatter + all-gather pair (half the wire bytes)."""
-    if not SEQUENCE_PARALLEL or _TP_AXIS is None or x.ndim < 3:
+    if not SEQUENCE_PARALLEL or st.tp is None or x.ndim < 3:
         return False
-    tp_n = _AXES_SIZES.get(_TP_AXIS, 1)
+    tp_n = st.size(st.tp)
     return tp_n > 1 and x.shape[1] % tp_n == 0 and x.shape[1] > 1
 
 
 def constrain_tokens(x):
     """Anchor a (B, S, d) activation: batch over data axes; S over model
     when sequence parallelism applies (never for single-token decode)."""
-    if not _DP_AXES:
+    st = axis_state()
+    if not st.dp:
         return x
-    seq = _TP_AXIS if _seq_shardable(x) else None
-    return constrain(x, P(_DP_AXES, seq, *([None] * (x.ndim - 2))))
+    seq = st.tp if _seq_shardable(x, st) else None
+    return constrain(x, P(st.dp, seq, *([None] * (x.ndim - 2))))
 
 
 def constrain_logits(x):
     """Anchor (B, S, V) logits: batch over data; S over model when
     sequence-parallel (keeps the fp32 loss buffer sharded), else vocab."""
-    if not _DP_AXES:
+    st = axis_state()
+    if not st.dp:
         return x
-    if _seq_shardable(x):
-        return constrain(x, P(_DP_AXES, _TP_AXIS,
+    if _seq_shardable(x, st):
+        return constrain(x, P(st.dp, st.tp,
                               *([None] * (x.ndim - 2))))
-    return constrain(x, P(_DP_AXES, *([None] * (x.ndim - 2)), _TP_AXIS))
+    return constrain(x, P(st.dp, *([None] * (x.ndim - 2)), st.tp))
 
 
 def constrain_heads(x):
     """Anchor a (B, S, H, D) attention tensor: batch over data, heads TP."""
-    if not _DP_AXES:
+    st = axis_state()
+    if not st.dp:
         return x
-    return constrain(x, P(_DP_AXES, None, _TP_AXIS, None))
+    return constrain(x, P(st.dp, None, st.tp, None))

@@ -1,53 +1,70 @@
-"""Serving engine: continuous batching over a PAGED (block) KV cache.
+"""Serving engine: continuous batching over a ref-counted paged KV cache.
 
 The engine prices exactly what the paper's TCO/token metric prices: the
-generate stage under heavy multi-tenant load.  The seed's wave batcher
-(lockstep waves, bucketed by exact prompt length, host sync per token)
-modeled exactly the utilization losses the paper's batching/pipelining
-analysis (§4.2, Fig 6/8) says to avoid.  PR 1 replaced it with Orca-style
-iteration-level scheduling over per-slot ``max_len`` KV stripes; this
-version replaces the stripes with vLLM-style paged allocation plus chunked
-prefill:
+generate stage under heavy multi-tenant load.  PR 1 replaced the seed's
+lockstep wave batcher with Orca-style iteration-level scheduling; PR 2 made
+KV memory block-granular (paged allocation + chunked prefill).  This version
+makes the block pool a **shared, content-addressed store** and drops the
+worst-case reservation:
 
   * the KV cache is ONE pool of fixed-size token blocks
-    (``model.init_paged_cache``, (L, num_blocks, block_size, Hk, hd))
-    shared by every request; a host-side free-list allocator
-    (``serving.paged.BlockAllocator``) hands blocks to decode lanes as
-    their sequences grow and reclaims them at retirement, so a long prompt
-    no longer strands a full ``max_len`` stripe that short requests could
-    use — admission is **block-granular**;
-  * each lane addresses the pool through a per-row block table threaded
-    into the jitted decode step: ``layers.attention_decode`` scatters the
-    new K/V through the table and gathers the context back block-by-block;
-  * admission: queued requests reserve their worst-case block count
-    (prompt + decode budget — no mid-flight preemption needed), then the
-    prompt is prefilled through ``model.prefill_slots`` in left-padded
-    buckets.  Prompts longer than ``prefill_chunk`` are processed in
-    **chunks interleaved with decode iterations**, so admitting a long
-    prompt no longer stalls in-flight decodes for its whole prefill;
-  * decode: one fully jitted masked step carries
-    ``(cache, last_logits, pos[B], active[B], budget[B], keys[B])`` with
-    donated buffers; sampling runs inside the jit with a PER-REQUEST key
-    (``fold_in(seed, uid)``, so stochastic outputs are reproducible no
-    matter which co-tenants share the batch) and EOS/budget retirement is
-    computed on-device — the hot loop is one dispatch plus one token-sized
-    device->host read per generated token;
-  * scheduling: lanes freed by EOS or ``max_new_tokens`` return their
-    blocks to the pool and are refilled from the queue between decode
-    iterations.  Freed blocks are NOT zeroed — a retired lane's block
-    table is pointed at the trash block, so its masked no-op writes cannot
-    touch a re-assigned block.
+    (``model.init_paged_cache``) addressed through per-lane block tables in
+    the jitted decode/prefill steps — unchanged from PR 2;
+  * **prefix caching**: full blocks are registered in a hash-chained prefix
+    index (``serving.paged.BlockStore``).  ``admit`` matches the longest
+    cached prefix of the prompt and the lane STARTS with those blocks —
+    prefill runs only the uncached tail, entering the existing chunked
+    continuation path with ``start = cached_len``.  Requests sharing a
+    system prompt or few-shot header therefore share its KV bytes and skip
+    its prefill compute.  At least one prompt token is always recomputed
+    (decode needs the last-token logits);
+  * retired requests' full blocks linger in an **LRU pool** (still
+    matchable) until allocation pressure evicts them, so a request admitted
+    after its prefix donor finished still hits;
+  * **copy-on-write**: before any write the engine runs a write barrier
+    (``ensure_writable``) — a block another lane can read is swapped for a
+    fresh block and its device payload copied, so sharing is never
+    observable through the attention gather.  (With full-block-only sharing
+    writes land past the shared prefix by construction; the barrier makes
+    that an enforced invariant rather than an accident.)
+  * **optimistic admission + preemption**: nothing is reserved.  A request
+    is admitted when the store can cover its *uncached prompt* plus one
+    decode block; decode growth may then run the pool dry
+    (``OutOfBlocks``), and the engine **preempts the youngest request** —
+    release its blocks, re-queue it at the head with its generated tokens
+    appended to the prompt, recompute on re-admission.  Its full blocks
+    usually survive in the LRU pool, so the recompute is mostly prefix-cache
+    hits.  Sampling keys are POSITIONAL — token p of request uid samples
+    with ``fold_in(fold_in(seed, uid), p)`` — so stochastic outputs are
+    independent of co-tenants AND unchanged by preemption, with O(1)
+    resume;
+  * **multi-step decode** (``decode_steps=k``): the jitted step runs k
+    decode iterations per host sync (``lax.scan`` with masked early-exit on
+    EOS/budget retirement), amortizing dispatch + device->host latency over
+    k tokens.  Defaults to 1 (bit-identical to the single-step engine).
+
+Correctness contract (pinned by tests/test_continuous_batching.py): greedy
+outputs are bit-identical with prefix caching on or off, across concurrent
+prefix sharers, LRU revivals and preemption-recompute.
 
 Knobs (see also examples/quickstart.py):
   * ``block_size`` — tokens per KV block.  Small blocks (8-16) minimize
-    fragmentation (waste is < one block per request); ``block_size >=
-    max_len`` degenerates to PR 1's slot-per-request reservation and is
-    the baseline in ``benchmarks/serving_bench.py``.
+    fragmentation AND maximize prefix-sharing granularity (only FULL blocks
+    are shared); ``block_size >= max_len`` degenerates to one stripe per
+    request.
   * ``num_blocks`` — pool size; defaults to ``max_batch`` full-length
-    stripes' worth.  Admission is limited by blocks (memory), lanes
-    (``max_batch``) and per-request context (``max_len``) independently.
+    stripes' worth.
   * ``prefill_chunk`` — max prompt tokens prefilled per scheduler
     iteration (None = whole prompt in one call).
+  * ``prefix_cache`` — block sharing on/off (off: every block exclusive,
+    released blocks return straight to the free list).
+  * ``decode_steps`` — decode iterations per jitted step / host sync.
+
+vlm note: the patch prefix is part of each lane's cache, so its positions
+enter the hash chain as sentinel ids.  This engine always feeds the zero
+patch stub, making the prefix identical across requests and therefore
+shareable; if real per-request patch embeddings land, their digest must
+join the chain.
 
 Families with attention KV caches (dense, moe, vlm) run this continuous
 path.  SSM/hybrid/audio recurrent state cannot be left-pad-masked without
@@ -55,20 +72,17 @@ polluting the scan state, so those families fall back to the seed's wave
 batching; ``mode="wave"`` forces that path for any family.
 
 On a multi-device mesh, pass ``mesh=``: parameters and the cache are placed
-with the serve shardings from ``parallel.sharding`` (mode="serve": resident
-TP weights; the paged pool shards KV heads over ``model`` — block tables
-are request-local, so the pool itself is not batch-shardable) and the
-jitted functions inherit that placement.  Caveat: this sets the sharding
-module's process-global axis sizes (they must be visible when the jits
-trace), so one serving mesh per process — restore via
-``set_mesh_axis_sizes`` if the process later runs un-meshed work.  On CPU
-smoke runs the same code executes on one device.
+with the serve shardings from ``parallel.sharding`` (mode="serve").  Axis
+state is ENGINE-SCOPED (``sharding.use_axes`` wraps every jitted-function
+body), so several engines with different meshes can coexist in one process
+and nothing leaks into ambient sharding state.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +91,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.parallel import sharding
-from repro.serving.paged import TRASH_BLOCK, BlockAllocator
+from repro.serving.paged import (BlockStore, OutOfBlocks, TRASH_BLOCK,
+                                 chain_hashes)
 from repro.serving.sampler import SamplerConfig, sample
 
 # Families whose KV cache supports block-level admission (see module doc).
@@ -87,7 +102,7 @@ CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
 @dataclass
 class Request:
     uid: int
-    prompt: np.ndarray  # (S,) int32
+    prompt: np.ndarray  # (S,) int32 — the ORIGINAL prompt
     max_new_tokens: int
     output: List[int] = field(default_factory=list)
     done: bool = False
@@ -95,26 +110,42 @@ class Request:
 
 @dataclass
 class _Prefilling:
-    """A request mid-admission: its prompt is entering the cache in chunks."""
+    """A request mid-admission: its prompt is entering the cache in chunks.
+
+    ``tokens`` is the EFFECTIVE prompt (original prompt plus any tokens
+    generated before a preemption — recompute replays them as prompt).
+    ``consumed`` counts effective-prompt tokens already in the cache; it
+    starts at the prefix-cache hit length, so prefill begins at the
+    uncached tail.  ``cached_len`` is the cache-position hit length
+    (including any vlm patch prefix) — nonzero means the first chunk uses
+    the continuation path (the cached context is gathered, patches are NOT
+    re-embedded)."""
     req: Request
     lane: int
-    budget: int  # decode budget clamped to the cache (fixed at admission)
-    consumed: int = 0  # prompt tokens already prefilled
+    budget: int  # decode budget remaining (clamped; minus pre-preemption output)
+    tokens: np.ndarray
+    consumed: int = 0
+    cached_len: int = 0
+    counted_cached: int = 0  # cached tokens credited to stats at admission
 
 
 @dataclass
 class EngineStats:
     prefill_tokens: int = 0
     prefill_chunks: int = 0
+    cached_prompt_tokens: int = 0  # prompt tokens skipped via prefix cache
     generated_tokens: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
     decode_steps: int = 0
     admissions: int = 0
+    preemptions: int = 0
     # Occupancy: active lanes summed over decode steps vs. lane capacity.
     occupied_slot_steps: int = 0
     slot_steps: int = 0
-    # KV memory: live TOKENS summed over decode steps vs. pool tokens.
+    # KV memory: live LOGICAL tokens summed over decode steps vs. pool
+    # tokens.  With prefix sharing the ratio can exceed 1.0 — lanes are
+    # serving more token-context than the pool physically stores.
     used_token_steps: int = 0
     pool_token_steps: int = 0
 
@@ -132,12 +163,19 @@ class EngineStats:
         return self.occupied_slot_steps / max(self.decode_steps, 1)
 
     @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens served from the prefix cache instead
+        of being prefilled (recompute after preemption counts as prefill,
+        so thrash shows up here too)."""
+        seen = self.cached_prompt_tokens + self.prefill_tokens
+        return self.cached_prompt_tokens / max(seen, 1)
+
+    @property
     def block_utilization(self) -> float:
-        """Fraction of the KV pool's TOKEN capacity holding live tokens,
-        averaged over decode steps — the capacity-fragmentation metric
-        paged allocation improves (a stripe engine counts a whole stripe
-        against the pool per request; paging wastes at most one partial
-        block per request)."""
+        """Live logical tokens vs. pool token capacity, averaged over
+        decode steps.  >1.0 means prefix sharing is serving more context
+        than the pool stores — the capacity win §4.2 prices into
+        TCO/token."""
         return self.used_token_steps / max(self.pool_token_steps, 1)
 
 
@@ -156,15 +194,19 @@ class ServingEngine:
                  mode: str = "auto", pad_id: int = 0, seed: int = 0,
                  mesh=None, block_size: int = 8,
                  num_blocks: Optional[int] = None,
-                 prefill_chunk: Optional[int] = 32):
+                 prefill_chunk: Optional[int] = 32,
+                 prefix_cache: bool = True,
+                 decode_steps: int = 1):
         """mode: "auto" (continuous where the family supports it),
         "continuous" (error if unsupported) or "wave" (force the legacy
         lockstep baseline).
 
-        block_size / num_blocks / prefill_chunk: paged-KV knobs, see the
-        module docstring.  Defaults give ``max_batch`` stripes' worth of
-        blocks and chunk prompts longer than 32 tokens.
+        block_size / num_blocks / prefill_chunk / prefix_cache /
+        decode_steps: paged-KV and scheduler knobs, see the module
+        docstring.
         """
+        if decode_steps < 1:
+            raise ValueError("decode_steps must be >= 1")
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
@@ -173,6 +215,11 @@ class ServingEngine:
         self.sampler = sampler or SamplerConfig()
         self.stats = EngineStats()
         self._queue: List[Request] = []
+        self._instant: List[Tuple[int, List[int]]] = []  # zero-budget retires
+        #: uid -> (content length, chain digests): a queue head waiting
+        #: for capacity is re-matched every scheduler step — hash its
+        #: prompt once, not once per step.
+        self._digest_cache: Dict[int, Tuple[int, List[bytes]]] = {}
         self._uid = 0
 
         if mode == "auto":
@@ -186,9 +233,12 @@ class ServingEngine:
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.prefill_chunk = prefill_chunk
+        self.prefix_cache = prefix_cache
+        self.decode_steps = decode_steps
 
         self.params = params
         self._mesh = mesh
+        self._axes = sharding.AxisState.from_mesh(mesh)
         if mesh is not None:
             self.params = self._place_serve(mesh, params)
 
@@ -197,44 +247,61 @@ class ServingEngine:
 
         # Legacy wave path (also the fallback for recurrent-state families).
         self._prefill = jax.jit(
-            lambda p, b: M.prefill(cfg, p, b, max_len))
+            self._scoped(lambda p, b: M.prefill(cfg, p, b, max_len)))
         self._decode = jax.jit(
-            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos))
+            self._scoped(lambda p, c, t, pos: M.decode_step(cfg, p, c, t,
+                                                            pos)))
 
         if self.mode == "continuous":
             self._init_continuous(donate, seed)
 
+    def _scoped(self, fn):
+        """Run ``fn`` (a to-be-jitted body) under THIS engine's axis state,
+        so trace-time sharding anchors see the engine's mesh — not whatever
+        ambient state the process happens to carry."""
+        axes = self._axes
+
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with sharding.use_axes(axes):
+                return fn(*args, **kwargs)
+        return wrapped
+
     # -- public API ----------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
         prompt = np.asarray(prompt, np.int32)
-        if max_new_tokens < 1:
-            # The wave path would silently emit nothing while the slot
-            # scheduler always decodes once: reject uniformly instead.
-            raise ValueError("max_new_tokens must be >= 1")
         if len(prompt) >= self.max_len:
-            # Same bound in both modes: wave prefill would otherwise fail
-            # deep in cache padding (or silently emit nothing at exactly
-            # max_len).
+            # Same bound in both modes (and regardless of budget): wave
+            # prefill would otherwise fail deep in cache padding (or
+            # silently emit nothing at exactly max_len).
             raise ValueError(
                 f"prompt length {len(prompt)} leaves no decode room in a "
                 f"{self.max_len}-token cache")
+        self._uid += 1
+        uid = self._uid
+        if max_new_tokens < 1:
+            # A zero-budget request retires immediately with an empty
+            # output: it never touches the scheduler or the block pool.
+            self._instant.append((uid, []))
+            return uid
         if self.mode == "continuous":
             worst = self._worst_case_tokens(prompt, max_new_tokens)
-            if self._alloc.blocks_for(worst) > min(
-                    self._alloc.num_blocks, self._alloc.max_blocks_per_slot):
+            need = self._alloc.blocks_for(worst)
+            cap = min(self._alloc.num_blocks, self._alloc.max_blocks_per_slot)
+            if need > cap:
                 raise ValueError(
-                    f"request needs {self._alloc.blocks_for(worst)} KV "
-                    f"blocks; the pool can never satisfy it")
-        self._uid += 1
-        self._queue.append(Request(self._uid, prompt, max_new_tokens))
-        return self._uid
+                    f"request needs {need} KV blocks but the pool/block "
+                    f"table caps at {cap}; it can never be admitted "
+                    f"(raise num_blocks or shorten the prompt/budget)")
+        self._queue.append(Request(uid, prompt, max_new_tokens))
+        return uid
 
     def step(self) -> List[Tuple[int, List[int]]]:
-        """One scheduler iteration: admit queued requests onto free lanes,
-        run ONE prefill chunk for admitting prompts, then one jitted masked
-        decode step across all lanes — chunked prefill and decode interleave
-        at this granularity, so a long prompt's admission cannot stall
-        in-flight decodes for its whole prefill.
+        """One scheduler iteration: admit queued requests onto free lanes
+        (prefix-cache matched), run ONE prefill chunk for admitting
+        prompts, then ``decode_steps`` jitted masked decode iterations
+        across all lanes.  Block-pool pressure anywhere in here preempts
+        the youngest request (see module docstring).
 
         Returns the requests finished this iteration as (uid, tokens).
         """
@@ -242,48 +309,79 @@ class ServingEngine:
             raise RuntimeError(
                 f"step() requires mode='continuous' (engine is in "
                 f"{self.mode!r} mode); use run()")
+        finished: List[Tuple[int, List[int]]] = list(self._instant)
+        self._instant = []
         self._admit()
         self._prefill_step()
         if not self._host_active.any():
-            return []
+            return finished
 
-        # Hand each about-to-decode lane the block its next token lands in
-        # (always within the admission reservation, so this cannot fail).
+        K = self.decode_steps
+        # Hand each about-to-decode lane the blocks its next (up to K)
+        # tokens land in.  Growth is optimistic: OutOfBlocks preempts the
+        # youngest request and retries — possibly preempting the growing
+        # lane itself.
         for i in np.nonzero(self._host_active)[0]:
-            self._alloc.grow(int(i), self._prefix + int(self._host_pos[i]) + 1)
+            i = int(i)
+            if not self._host_active[i]:
+                continue  # preempted while an earlier lane grew
+            steps_i = min(K, int(self._host_rem[i]))
+            lo = self._prefix + int(self._host_pos[i])
+            self._grow_for_writes(
+                i, lo, lo + steps_i,
+                alive=lambda i=i: bool(self._host_active[i]))
+        if not self._host_active.any():
+            return finished
         tables = jnp.asarray(self._alloc.block_table())
 
         t0 = time.perf_counter()
         (self._cache, self._logits, self._pos, self._active, self._budget,
-         host_out, self._keys) = self._decode_fn(
+         host_out) = self._decode_fn(
             self.params, self._cache, self._logits, self._pos, self._active,
             self._budget, self._keys, tables)
-        host = np.asarray(host_out)  # the per-token host sync point
+        host = np.asarray(host_out)  # (2, K, B): the per-window host sync
         tok_h, active_h = host[0], host[1].astype(bool)
         self.stats.decode_s += time.perf_counter() - t0
 
-        was = self._host_active
-        self.stats.decode_steps += 1
-        self.stats.occupied_slot_steps += int(was.sum())
-        self.stats.slot_steps += self.max_batch
-        self.stats.used_token_steps += self._alloc.live_tokens
+        was = self._host_active.copy()
+        self.stats.decode_steps += K
+        self.stats.slot_steps += self.max_batch * K
+        self.stats.used_token_steps += self._alloc.live_tokens * K
         self.stats.pool_token_steps += self._alloc.num_blocks \
-            * self._alloc.block_size
+            * self._alloc.block_size * K
 
-        finished: List[Tuple[int, List[int]]] = []
+        bs = self._alloc.block_size
         for i in np.nonzero(was)[0]:
+            i = int(i)
             r = self._slot_req[i]
-            r.output.append(int(tok_h[i]))
-            self._host_pos[i] += 1
-            self.stats.generated_tokens += 1
-            if not active_h[i]:
+            pos_before = self._prefix + int(self._host_pos[i])
+            alive = True
+            for j in range(K):
+                if not alive:
+                    break
+                r.output.append(int(tok_h[j, i]))
+                self._host_pos[i] += 1
+                self._host_rem[i] -= 1
+                self.stats.generated_tokens += 1
+                self.stats.occupied_slot_steps += 1
+                alive = bool(active_h[j, i])
+            if self.prefix_cache and \
+                    (self._prefix + int(self._host_pos[i])) // bs \
+                    != pos_before // bs:
+                # A block boundary was crossed: the freshly-filled full
+                # block(s) become matchable for future admissions.  (The
+                # store's chain cache makes this O(new blocks), and the
+                # boundary check keeps the common no-new-block window from
+                # paying even the content-array concat.)
+                self._alloc.commit_full(i, self._content_ids(r))
+            if not alive:
                 r.done = True
                 finished.append((r.uid, r.output))
                 self._slot_req[i] = None
-                # Blocks return to the pool; the lane's table rows become
-                # trash so its dead-lane writes cannot touch them again.
-                self._alloc.release(int(i))
-        self._host_active = active_h
+                self._host_active[i] = False
+                # References drop; exclusive full blocks retire into the
+                # LRU pool (still matchable), partial ones go blank.
+                self._alloc.release(i)
         return finished
 
     def run(self) -> Dict[int, List[int]]:
@@ -291,7 +389,8 @@ class ServingEngine:
         if self.mode != "continuous":
             return self._run_waves()
         results: Dict[int, List[int]] = {}
-        while self._queue or self._prefilling or self._host_active.any():
+        while (self._queue or self._prefilling or self._instant
+               or self._host_active.any()):
             for uid, toks in self.step():
                 results[uid] = toks
         return results
@@ -305,7 +404,8 @@ class ServingEngine:
         table_width = -(-ctx // bs)
         if self.num_blocks is None:
             self.num_blocks = B * table_width
-        self._alloc = BlockAllocator(self.num_blocks, bs, B, table_width)
+        self._alloc = BlockStore(self.num_blocks, bs, B, table_width,
+                                 prefix_cache=self.prefix_cache)
         # +1 device block: id 0 is the dead-lane trash sink.
         self._cache = M.init_paged_cache(cfg, self.num_blocks + 1, bs)
         if self._mesh is not None:
@@ -322,81 +422,238 @@ class ServingEngine:
         self._prefilling: List[_Prefilling] = []
         self._host_active = np.zeros(B, bool)
         self._host_pos = np.zeros(B, np.int64)
+        self._host_rem = np.zeros(B, np.int64)  # decode budget remaining
 
         sampler, eos_id, pad_id = self.sampler, self.eos_id, self.pad_id
+        K = self.decode_steps
 
-        def decode_step(params, cache, last_logits, pos, active, budget,
-                        keys, tables):
-            # Inactive lanes still run as masked no-op rows, but a lane
-            # mid-chunked-prefill already OWNS blocks — point dead lanes'
-            # tables at the trash block so their no-op writes cannot clobber
-            # a partially prefilled prompt (or a re-assigned block).
-            tables = jnp.where(active[:, None], tables, TRASH_BLOCK)
-            # Per-lane keys: each request's stream was seeded by fold_in at
-            # admission, so sampling is reproducible per request regardless
-            # of which co-tenants share the batch.
-            splits = jax.vmap(jax.random.split)(keys)  # (B, 2, key)
-            keys, sub = splits[:, 0], splits[:, 1]
-            tok = sample(sampler, last_logits, sub, active=active,
-                         pad_id=pad_id)
-            budget = budget - active.astype(jnp.int32)
-            retire = active & ((tok == eos_id) | (budget <= 0))
-            # All lanes run the model (a retired/free lane is a masked
-            # no-op — the occupancy loss the stats report); the active
-            # mask keeps dead lanes out of MoE expert capacity.
-            logits, cache = M.decode_step(cfg, params, cache, tok[:, None],
-                                          pos, active=active,
-                                          block_tables=tables)
-            pos = pos + active.astype(jnp.int32)
-            new_active = active & ~retire
-            # One packed (2, B) buffer -> a single device->host read per
-            # token in the scheduler loop.
-            host_out = jnp.stack([tok, new_active.astype(jnp.int32)])
-            return (cache, logits[:, 0], pos, new_active, budget, host_out,
-                    keys)
+        def decode_window(params, cache, last_logits, pos, active, budget,
+                          keys, tables):
+            def one_step(carry, _):
+                cache, logits, pos, active, budget = carry
+                # Inactive lanes (retired mid-window, mid-chunked-prefill,
+                # preempted) run as masked no-op rows with their tables
+                # pointed at the trash block, so their writes cannot
+                # clobber a live or partially prefilled block.
+                tbl = jnp.where(active[:, None], tables, TRASH_BLOCK)
+                # Positional per-lane keys: the token at position p of
+                # request uid samples with fold_in(fold_in(seed, uid), p)
+                # — reproducible per request regardless of co-tenants, and
+                # preemption-invariant by construction (a recompute
+                # resamples position p with the same key; no stream
+                # fast-forwarding needed).
+                sub = jax.vmap(jax.random.fold_in)(keys, pos)
+                tok = sample(sampler, logits, sub, active=active,
+                             pad_id=pad_id)
+                budget = budget - active.astype(jnp.int32)
+                retire = active & ((tok == eos_id) | (budget <= 0))
+                # All lanes run the model (a retired/free lane is a masked
+                # no-op — the occupancy loss the stats report); the active
+                # mask keeps dead lanes out of MoE expert capacity.
+                logits2, cache = M.decode_step(cfg, params, cache,
+                                               tok[:, None], pos,
+                                               active=active,
+                                               block_tables=tbl)
+                pos = pos + active.astype(jnp.int32)
+                new_active = active & ~retire
+                return ((cache, logits2[:, 0], pos, new_active, budget),
+                        (tok, new_active.astype(jnp.int32)))
+
+            carry = (cache, last_logits, pos, active, budget)
+            carry, (toks, actives) = jax.lax.scan(one_step, carry, None,
+                                                  length=K)
+            cache, logits, pos, active, budget = carry
+            # One packed (2, K, B) buffer -> a single device->host read per
+            # decode window in the scheduler loop.
+            host_out = jnp.stack([toks, actives])
+            return cache, logits, pos, active, budget, host_out
 
         self._decode_fn = jax.jit(
-            decode_step,
-            donate_argnums=(1, 2, 3, 4, 5, 6) if donate else ())
+            self._scoped(decode_window),
+            donate_argnums=(1, 2, 3, 4, 5) if donate else ())
         # One jit per (first/continuation) handles every (group size,
         # bucket) shape combination; power-of-two buckets keep the number
         # of retraces small.
         self._prefill_first = jax.jit(
-            lambda p, c, t, ln, bt: M.prefill_slots(cfg, p, c, t, ln, bt),
+            self._scoped(
+                lambda p, c, t, ln, bt: M.prefill_slots(cfg, p, c, t, ln,
+                                                        bt)),
             donate_argnums=(1,) if donate else ())
         self._prefill_cont = jax.jit(
-            lambda p, c, t, ln, bt, st: M.prefill_slots(cfg, p, c, t, ln, bt,
-                                                        start=st),
+            self._scoped(
+                lambda p, c, t, ln, bt, st: M.prefill_slots(
+                    cfg, p, c, t, ln, bt, start=st)),
             donate_argnums=(1,) if donate else ())
 
     def _clamped_budget(self, prompt, max_new_tokens: int) -> int:
         """Decode budget clamped so the sequence fits the per-request
-        context — the ONE definition the reservation, the device budget
-        and the submit guard all share."""
+        context — the ONE definition admission, the device budget and the
+        submit guard all share."""
         return min(max_new_tokens, self.max_len - len(prompt))
 
     def _worst_case_tokens(self, prompt, max_new_tokens: int) -> int:
-        """Total cache tokens a request can ever hold (reservation size)."""
+        """Total cache tokens a request can ever hold."""
         return self._prefix + len(prompt) \
             + self._clamped_budget(prompt, max_new_tokens)
 
+    def _effective_prompt(self, r: Request) -> np.ndarray:
+        """Prompt to prefill: the original prompt plus any tokens generated
+        before a preemption (recompute replays them)."""
+        if not r.output:
+            return r.prompt
+        return np.concatenate(
+            [r.prompt, np.asarray(r.output, np.int32)])
+
+    def _content_ids(self, r: Request) -> np.ndarray:
+        """Token ids at each cache position, for the prefix-cache hash
+        chain: sentinel -1 per vlm patch position (the patch stub is
+        engine-constant, see module docstring), then prompt, then generated
+        tokens."""
+        return np.concatenate([
+            np.full(self._prefix, -1, np.int64),
+            np.asarray(r.prompt, np.int64),
+            np.asarray(r.output, np.int64)])
+
+    def _remaining_budget(self, r: Request) -> int:
+        return self._clamped_budget(r.prompt, r.max_new_tokens) \
+            - len(r.output)
+
+    def _prompt_digests(self, r: Request) -> List[bytes]:
+        """Chain digests of the request's full content, cached by length
+        (the content only ever grows — on preemption requeue — which
+        naturally invalidates the entry)."""
+        n = self._prefix + len(r.prompt) + len(r.output)
+        hit = self._digest_cache.get(r.uid)
+        if hit is not None and hit[0] == n:
+            return hit[1]
+        digests = chain_hashes(self._content_ids(r), self._alloc.block_size)
+        self._digest_cache[r.uid] = (n, digests)
+        return digests
+
+    # -- preemption ----------------------------------------------------------
+    def _youngest(self):
+        """The most recently submitted in-flight request: ("lane", i) or
+        ("prefill", s).  Re-queued preempted requests keep their uid, so
+        they age back into protection once re-admitted."""
+        best, best_uid = None, -1
+        for i in np.nonzero(self._host_active)[0]:
+            r = self._slot_req[int(i)]
+            if r is not None and r.uid > best_uid:
+                best, best_uid = ("lane", int(i)), r.uid
+        for s in self._prefilling:
+            if s.req.uid > best_uid:
+                best, best_uid = ("prefill", s), s.req.uid
+        return best
+
+    def _preempt(self, victim) -> None:
+        """Release the victim's blocks and re-queue it at the head for
+        recompute.  Only its NON-SHARED blocks actually free (shared prefix
+        blocks keep their other references); its full blocks retire into
+        the LRU pool, so the recompute is usually prefix-cache hits."""
+        kind, v = victim
+        self.stats.preemptions += 1
+        if kind == "lane":
+            r = self._slot_req[v]
+            self._slot_req[v] = None
+            self._host_active[v] = False
+            self._host_rem[v] = 0
+            self._active = self._active.at[v].set(False)
+            self._alloc.release(v)
+            self._queue.insert(0, r)
+        else:
+            self._prefilling.remove(v)
+            self._alloc.release(v.lane)
+            self._queue.insert(0, v.req)
+            # The abandoned admission's cache credit never served anything;
+            # roll it back so prefix_hit_rate reflects thrash instead of
+            # being inflated by it (re-admission re-counts its real hits).
+            self.stats.cached_prompt_tokens -= v.counted_cached
+
+    def _under_pressure(self, alive: Callable[[], bool],
+                        op: Callable[[], None]) -> bool:
+        """Run an allocator op that may raise OutOfBlocks, preempting the
+        youngest request and retrying until it succeeds.  Returns False if
+        the op's own request was preempted (op abandoned)."""
+        while True:
+            if not alive():
+                return False
+            try:
+                op()
+                return True
+            except OutOfBlocks:
+                victim = self._youngest()
+                # The growing request is itself in flight, so a victim
+                # always exists (possibly the grower).
+                assert victim is not None, "OutOfBlocks with no live request"
+                self._preempt(victim)
+
+    def _grow_for_writes(self, lane: int, lo: int, hi: int,
+                         alive: Callable[[], bool]) -> bool:
+        """Grow ``lane`` to ``hi`` tokens and run the copy-on-write barrier
+        over the blocks covering cache positions [lo, hi).  Returns False
+        if the lane was preempted along the way."""
+        if not self._under_pressure(
+                alive, lambda: self._alloc.grow(lane, hi)):
+            return False
+        bs = self._alloc.block_size
+        for idx in range(lo // bs, (hi - 1) // bs + 1):
+            moved: List[Tuple[int, int]] = []
+
+            def cow(idx=idx, moved=moved):
+                mv = self._alloc.ensure_writable(lane, idx * bs)
+                if mv is not None:
+                    moved.append(mv)
+
+            if not self._under_pressure(alive, cow):
+                return False
+            for src, dst in moved:
+                self._copy_block(src, dst)
+        return True
+
+    def _copy_block(self, src: int, dst: int) -> None:
+        """Device-side copy-on-write payload copy (all layers of one
+        block).  Rare: only a write into a still-shared block triggers
+        it."""
+        self._cache = M.copy_cache_block(self._cache, src, dst)
+
+    # -- admission / prefill -------------------------------------------------
     def _admit(self) -> None:
-        """Move queued requests onto free lanes, block-granularly: each
-        reserves only its own worst case (prompt + budget), so many short
-        requests can hold lanes alongside one long one."""
+        """Move queued requests onto free lanes.  Admission is OPTIMISTIC:
+        a request enters when the store can cover its uncached prompt tail
+        plus one decode block RIGHT NOW — the decode budget is not
+        reserved; preemption recovers from over-commitment.  Prefix-cache
+        hits shrink the tail, so shared-prompt traffic admits far deeper
+        than the pool's raw capacity."""
         owned = {s.lane for s in self._prefilling}
         free = [i for i, r in enumerate(self._slot_req)
                 if r is None and i not in owned]
         while self._queue and free:
             r = self._queue[0]
-            if not self._alloc.can_admit(
-                    self._worst_case_tokens(r.prompt, r.max_new_tokens)):
+            eff_len = len(r.prompt) + len(r.output)
+            digests = self._prompt_digests(r) if self.prefix_cache else []
+            cached_blocks, pooled = self._alloc.match_digests(
+                digests,
+                max_cached_tokens=self._prefix + eff_len - 1,
+                min_cached_tokens=self._prefix)
+            need_now = self._alloc.blocks_for(
+                self._prefix + eff_len + 1) - cached_blocks
+            # Matched-but-pooled blocks will be revived out of `available`
+            # by admit, so they cannot double as allocatable headroom.
+            if need_now > self._alloc.available - pooled:
                 break  # FIFO: wait for blocks rather than starve the head
             lane = free.pop(0)
-            self._alloc.admit(
-                lane, self._worst_case_tokens(r.prompt, r.max_new_tokens))
+            eff = self._effective_prompt(r)
+            cached_len = self._alloc.admit(
+                lane, digests=digests if self.prefix_cache else None,
+                max_cached_tokens=self._prefix + eff_len - 1,
+                min_cached_tokens=self._prefix)
+            self._digest_cache.pop(r.uid, None)
+            consumed = max(0, cached_len - self._prefix)
+            self.stats.cached_prompt_tokens += consumed
             self._prefilling.append(_Prefilling(
-                r, lane, self._clamped_budget(r.prompt, r.max_new_tokens)))
+                r, lane, self._remaining_budget(r), eff,
+                consumed=consumed, cached_len=cached_len,
+                counted_cached=consumed))
             self._queue.pop(0)
             self.stats.admissions += 1
 
@@ -404,23 +661,46 @@ class ServingEngine:
         """Run ONE prefill chunk for the current admission cohort."""
         if not self._prefilling:
             return
-        # First chunks embed the vlm patch prefix (a different traced
-        # shape), so group first-timers and continuations separately.
-        first = self._prefilling[0].consumed == 0
-        cohort = [s for s in self._prefilling
-                  if (s.consumed == 0) == first]
+
+        # From-scratch first chunks embed the vlm patch prefix (a different
+        # traced shape); cached or continuation chunks gather their context
+        # through the block table.  Group the two separately.
+        def _first(s: _Prefilling) -> bool:
+            return s.consumed == 0 and s.cached_len == 0
+
+        first = _first(self._prefilling[0])
+        cohort = [s for s in self._prefilling if _first(s) == first]
         cap = self.prefill_chunk or self.max_len
-        takes = [min(cap, len(s.req.prompt) - s.consumed) for s in cohort]
+
+        # Grow every member's blocks (write-barriered) BEFORE assembling
+        # the batch: growth can preempt cohort members (including the one
+        # being grown), which drops them from this chunk.
+        ready: List[Tuple[_Prefilling, int]] = []
+        for s in cohort:
+            if s not in self._prefilling:
+                continue  # preempted as a victim of an earlier member
+            take = min(cap, len(s.tokens) - s.consumed)
+            lo = self._prefix + s.consumed
+            if self._grow_for_writes(
+                    s.lane, lo, lo + take,
+                    alive=lambda s=s: s in self._prefilling):
+                ready.append((s, take))
+        # A LATER member's growth may have preempted an earlier one that
+        # had already grown — drop it, or its chunk would be written into
+        # released blocks and the preempted request wrongly activated.
+        ready = [(s, t) for (s, t) in ready if s in self._prefilling]
+        if not ready:
+            return
+        cohort, takes = [s for s, _ in ready], [t for _, t in ready]
         P = _bucket(max(takes), cap)
         n = len(cohort)
         tokens = np.full((n, P), self.pad_id, np.int32)
         lengths = np.empty(n, np.int32)
         starts = np.empty(n, np.int32)
         for j, (s, take) in enumerate(zip(cohort, takes)):
-            tokens[j, P - take:] = s.req.prompt[s.consumed:s.consumed + take]
+            tokens[j, P - take:] = s.tokens[s.consumed:s.consumed + take]
             lengths[j] = take
             starts[j] = self._prefix + s.consumed
-            self._alloc.grow(s.lane, self._prefix + s.consumed + take)
         tables = jnp.asarray(
             self._alloc.block_table()[[s.lane for s in cohort]])
 
@@ -437,7 +717,9 @@ class ServingEngine:
         done_rows, done = [], []
         for j, (s, take) in enumerate(zip(cohort, takes)):
             s.consumed += take
-            if s.consumed == len(s.req.prompt):
+            if self.prefix_cache:
+                self._alloc.commit_full(s.lane, self._content_ids(s.req))
+            if s.consumed == len(s.tokens):
                 done_rows.append(j)
                 done.append(s)
                 self._slot_req[s.lane] = s.req
@@ -445,43 +727,54 @@ class ServingEngine:
         if done:
             rows = jnp.asarray(done_rows)
             lanes = jnp.asarray([s.lane for s in done])
-            plens = jnp.asarray([len(s.req.prompt) for s in done], jnp.int32)
+            plens = jnp.asarray([len(s.tokens) for s in done], jnp.int32)
             budgets = jnp.asarray([s.budget for s in done], jnp.int32)
             self._logits = self._logits.at[lanes].set(logits_new[rows])
             self._pos = self._pos.at[lanes].set(plens)
             self._active = self._active.at[lanes].set(True)
             self._budget = self._budget.at[lanes].set(budgets)
             self._keys = self._keys.at[lanes].set(jnp.stack(
-                [jax.random.fold_in(self._base_key, s.req.uid)
-                 for s in done]))
+                [self._request_key(s.req) for s in done]))
             for s in done:
                 self._host_active[s.lane] = True
-                self._host_pos[s.lane] = len(s.req.prompt)
+                self._host_pos[s.lane] = len(s.tokens)
+                self._host_rem[s.lane] = s.budget
         jax.block_until_ready(self._logits)
         self.stats.prefill_s += time.perf_counter() - t0
         self.stats.prefill_tokens += int(sum(takes))
         self.stats.prefill_chunks += 1
 
+    def _request_key(self, r: Request):
+        """The request's base PRNG key: fold_in(seed, uid).  The decode
+        step folds the sampling POSITION in on top, so a preemption
+        recompute resumes the same stochastic stream with no
+        fast-forwarding (O(1) re-admission)."""
+        return jax.random.fold_in(self._base_key, r.uid)
+
     # -- mesh placement ------------------------------------------------------
     def _place_serve(self, mesh, params):
-        sharding.set_mesh_axis_sizes(mesh)
-        specs = sharding.param_specs(self.cfg, params, mode="serve")
-        specs = sharding.sanitize_specs(specs, params)
-        return jax.device_put(params, sharding.to_shardings(mesh, specs))
+        with sharding.use_axes(self._axes):
+            specs = sharding.param_specs(self.cfg, params, mode="serve")
+            specs = sharding.sanitize_specs(specs, params)
+            return jax.device_put(params,
+                                  sharding.to_shardings(mesh, specs))
 
     def _place_cache(self, mesh, cache):
-        specs = sharding.cache_specs(
-            self.cfg, cache, sharding._DP_AXES or None, self.max_batch,
-            paged=True)
-        specs = sharding.sanitize_specs(specs, cache)
-        return jax.device_put(cache, sharding.to_shardings(mesh, specs))
+        with sharding.use_axes(self._axes):
+            specs = sharding.cache_specs(
+                self.cfg, cache, self._axes.dp or None, self.max_batch,
+                paged=True)
+            specs = sharding.sanitize_specs(specs, cache)
+            return jax.device_put(cache, sharding.to_shardings(mesh, specs))
 
     # -- legacy wave path ----------------------------------------------------
     def _run_waves(self) -> Dict[int, List[int]]:
         """Lockstep wave batching, bucketed by exact prompt length (padding
         would let real tokens attend to pads without the masked-prefill
         machinery of the continuous path)."""
-        results: Dict[int, List[int]] = {}
+        results: Dict[int, List[int]] = {uid: toks
+                                         for uid, toks in self._instant}
+        self._instant = []
         by_len: Dict[int, List[Request]] = {}
         for r in self._queue:
             by_len.setdefault(len(r.prompt), []).append(r)

@@ -5,7 +5,10 @@ different completion lengths decode through one shared jitted masked step
 over a PAGED (block-table) KV cache, with per-request outputs bit-identical
 (greedy) to running each request alone through ``model.prefill`` +
 scalar-position ``model.decode_step`` — including when prompts are
-prefilled in chunks interleaved with in-flight decodes.
+prefilled in chunks interleaved with in-flight decodes, when blocks are
+SHARED through the prefix cache (concurrent sharers, LRU revival after the
+donor retired), when the pool over-commits and the engine preempts, and
+when ``decode_steps > 1`` amortizes the host sync.
 """
 import jax
 import jax.numpy as jnp
@@ -15,7 +18,7 @@ import pytest
 from repro.configs.base import get_config
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
-from repro.serving.paged import BlockAllocator
+from repro.serving.paged import BlockStore
 
 MAX_LEN = 32
 
@@ -205,10 +208,10 @@ def test_prefill_slots_paged_primitives(tiny):
     cfg, params = tiny
     prompt = np.arange(1, 8)  # length 7, bucket-padded to 8
     bs = 4
-    alloc = BlockAllocator(num_blocks=8, block_size=bs, num_slots=2,
-                           max_blocks_per_slot=MAX_LEN // bs)
+    alloc = BlockStore(num_blocks=8, block_size=bs, num_slots=2,
+                       max_blocks_per_slot=MAX_LEN // bs)
     cache = M.init_paged_cache(cfg, alloc.num_blocks + 1, bs)
-    alloc.admit(1, len(prompt) + 4)
+    alloc.admit(1)
     alloc.grow(1, len(prompt))  # 2 blocks: positions 0..3, 4..6
     P = 8
     toks = np.zeros((1, P), np.int32)
@@ -264,7 +267,9 @@ def test_moe_dispatch_valid_mask_frees_capacity():
 
 
 def test_engine_threads_serve_shardings(tiny):
-    """mesh= places params/cache with the serve layout; results unchanged."""
+    """mesh= places params/cache with the serve layout; results unchanged.
+    Axis state is engine-scoped (context-var), so the ambient sharding
+    state is untouched by building and running a meshed engine."""
     from jax.sharding import Mesh
     from repro.parallel import sharding as sh
 
@@ -273,17 +278,167 @@ def test_engine_threads_serve_shardings(tiny):
     ref = solo_greedy(cfg, params, prompt, 3)
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
                 ("data", "model"))
-    try:
+    ambient_before = sh.axis_state()
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                        eos_id=-1, mesh=mesh)
+    uid = eng.submit(prompt, max_new_tokens=3)
+    assert eng.run()[uid] == ref
+    assert eng._axes.sizes == (("data", 1), ("model", 1))
+    assert sh.axis_state() == ambient_before, \
+        "engine leaked mesh axis state into the ambient context"
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen2-moe-a2.7b",
+                                  "internvl2-26b"])
+def test_prefix_cache_bit_identical_on_vs_off(arch):
+    """Greedy outputs are bit-identical with prefix caching on vs off,
+    including (a) two requests sharing a prefix CONCURRENTLY and (b) a
+    request admitted after its prefix donor retired (LRU revival)."""
+    cfg, params = _make(arch)
+    rng = np.random.default_rng(7)
+    shared = rng.integers(1, cfg.vocab_size, size=13)  # > 1 full block
+    prompts = [np.concatenate([shared, rng.integers(1, cfg.vocab_size,
+                                                    size=n)])
+               for n in (3, 5, 2)]
+    budgets = (4, 3, 5)
+
+    def run(prefix_cache):
         eng = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
-                            eos_id=-1, mesh=mesh)
-        uid = eng.submit(prompt, max_new_tokens=3)
-        assert eng.run()[uid] == ref
-    finally:
-        # set_mesh_axis_sizes is module-global: restore the no-mesh state.
-        class _NoMesh:
-            axis_names = ()
-            devices = np.zeros((1,))
-        sh.set_mesh_axis_sizes(_NoMesh())
+                            eos_id=-1, block_size=4, prefill_chunk=8,
+                            prefix_cache=prefix_cache)
+        # First two share the prefix CONCURRENTLY (2 lanes); the third is
+        # admitted only after a donor retired, so its hit revives pooled
+        # blocks.
+        uids = [eng.submit(p, max_new_tokens=m)
+                for p, m in zip(prompts, budgets)]
+        out = eng.run()
+        return eng, [out[u] for u in uids]
+
+    eng_off, out_off = run(False)
+    eng_on, out_on = run(True)
+    assert out_on == out_off
+    for out, p, m in zip(out_on, prompts, budgets):
+        assert out == solo_greedy(cfg, params, p, m)
+    # The cache actually did something: prompt tokens were skipped, and
+    # the post-retirement admission revived pooled blocks.
+    assert eng_off.stats.cached_prompt_tokens == 0
+    assert eng_on.stats.cached_prompt_tokens > 0
+    assert eng_on.stats.prefix_hit_rate > 0
+    assert eng_on._alloc.lru_hits > 0
+    eng_on._alloc.check_invariants()
+
+
+def test_concurrent_sharers_hold_live_references(tiny):
+    """A request admitted while its prefix donor is STILL DECODING shares
+    the donor's live blocks (refcount >= 2 observed mid-run); outputs stay
+    bit-identical to solo."""
+    cfg, params = tiny
+    rng = np.random.default_rng(11)
+    shared = rng.integers(1, cfg.vocab_size, size=12)  # 3 full 4-blocks
+    p1 = np.concatenate([shared, rng.integers(1, cfg.vocab_size, size=3)])
+    p2 = np.concatenate([shared, rng.integers(1, cfg.vocab_size, size=2)])
+    p3 = np.concatenate([shared, rng.integers(1, cfg.vocab_size, size=4)])
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                        eos_id=-1, block_size=4, prefill_chunk=None)
+    # p1 (long budget) and p2 (short) enter cold; p3 is admitted onto p2's
+    # freed lane while p1 is still mid-decode and shares p1's live blocks.
+    uids = [eng.submit(p, max_new_tokens=m)
+            for p, m in zip((p1, p2, p3), (8, 2, 3))]
+    done, max_ref = {}, 0
+    while len(done) < 3:
+        for uid, toks in eng.step():
+            done[uid] = toks
+        if eng._alloc._ref:
+            max_ref = max(max_ref, max(eng._alloc._ref.values()))
+    assert max_ref >= 2, "prefix blocks were never concurrently shared"
+    for uid, p, m in zip(uids, (p1, p2, p3), (8, 2, 3)):
+        assert done[uid] == solo_greedy(cfg, params, p, m)
+    eng._alloc.check_invariants()
+
+
+def test_preemption_recompute_bit_identical(tiny):
+    """Optimistic admission over-commits a small pool; the engine preempts
+    the youngest request and recomputes it — final outputs bit-identical
+    to an unpressured run."""
+    cfg, params = tiny
+    rng = np.random.default_rng(8)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=5), 16) for _ in range(3)]
+
+    def run(num_blocks):
+        eng = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
+                            eos_id=-1, block_size=4, num_blocks=num_blocks)
+        uids = [eng.submit(p, max_new_tokens=m) for p, m in reqs]
+        out = eng.run()
+        return eng, [out[u] for u in uids]
+
+    eng_big, ref = run(num_blocks=24)  # worst case fits: no pressure
+    assert eng_big.stats.preemptions == 0
+    # 3 lanes admit on prompt need (2 blocks each) but grow to
+    # ceil((5+16)/4) = 6 blocks each = 18 > 10: preemption must kick in.
+    eng_small, out = run(num_blocks=10)
+    assert eng_small.stats.preemptions >= 1
+    assert out == ref
+    for out_i, (p, m) in zip(out, reqs):
+        assert out_i == solo_greedy(cfg, params, p, m)
+    eng_small._alloc.check_invariants()
+    assert eng_small._alloc.live_blocks == 0
+
+
+@pytest.mark.parametrize("k", [2, 3])
+def test_decode_steps_bit_identical(tiny, k):
+    """decode_steps=k runs k decode iterations per host sync with masked
+    early-exit on retirement; outputs match the single-step engine even
+    when budgets are not multiples of k."""
+    cfg, params = tiny
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n) for n in (4, 9, 6)]
+    budgets = (5, 7, 1)  # deliberately not multiples of k
+
+    eng = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
+                        eos_id=-1, decode_steps=k)
+    uids = [eng.submit(p, max_new_tokens=m) for p, m in zip(prompts, budgets)]
+    out = eng.run()
+    for uid, p, m in zip(uids, prompts, budgets):
+        assert out[uid] == solo_greedy(cfg, params, p, m)
+    # Host syncs amortize: ceil(max_budget / k) windows of k iterations.
+    assert eng.stats.decode_steps == -(-max(budgets) // k) * k
+    eng._alloc.check_invariants()
+    assert eng._alloc.live_blocks == 0
+
+
+def test_submit_rejects_impossible_request(tiny):
+    """A request whose worst case exceeds what the pool/block table can
+    EVER hold is rejected at submit with a clear error, not silently
+    clamped or left to starve the queue."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                        eos_id=-1, block_size=4, num_blocks=3)
+    with pytest.raises(ValueError, match="KV blocks"):
+        eng.submit(np.arange(1, 14), max_new_tokens=8)  # needs 6 > 3 blocks
+    # Oversized prompts keep the dedicated message.
+    with pytest.raises(ValueError, match="decode room"):
+        eng.submit(np.arange(1, MAX_LEN + 2), max_new_tokens=1)
+    # The pool was never touched.
+    assert eng._alloc.live_blocks == 0
+    assert eng.stats.admissions == 0
+
+
+def test_zero_budget_request_retires_without_touching_pool(tiny):
+    """max_new_tokens=0 completes immediately with an empty output — no
+    admission, no blocks, no decode steps."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                        eos_id=-1)
+    u0 = eng.submit(np.arange(1, 6), max_new_tokens=0)
+    u1 = eng.submit(np.arange(1, 6), max_new_tokens=2)
+    out = eng.run()
+    assert out[u0] == []
+    assert out[u1] == solo_greedy(cfg, params, np.arange(1, 6), 2)
+    assert eng.stats.admissions == 1  # only the real request
+    # step() also delivers instant retirements when nothing else runs.
+    u2 = eng.submit(np.arange(1, 4), max_new_tokens=0)
+    assert eng.step() == [(u2, [])]
+    assert eng._alloc.live_blocks == 0
 
 
 def test_decode_step_vector_positions_paged(tiny):
@@ -305,11 +460,11 @@ def test_decode_step_vector_positions_paged(tiny):
     tb, lb = solo_next(pb)
 
     bs = 8
-    alloc = BlockAllocator(num_blocks=8, block_size=bs, num_slots=2,
-                           max_blocks_per_slot=MAX_LEN // bs)
+    alloc = BlockStore(num_blocks=8, block_size=bs, num_slots=2,
+                       max_blocks_per_slot=MAX_LEN // bs)
     cache = M.init_paged_cache(cfg, alloc.num_blocks + 1, bs)
-    alloc.admit(0, 6 + 1)
-    alloc.admit(1, 10 + 1)
+    alloc.admit(0)
+    alloc.admit(1)
     alloc.grow(0, 6)
     alloc.grow(1, 10)
     toks = np.zeros((2, 16), np.int32)

@@ -1,157 +1,198 @@
-"""Paged KV block allocator properties (needs hypothesis).
+"""Ref-counted paged KV block store: deterministic invariant pins.
 
-Random submit/decode/retire traces against ``serving.paged.BlockAllocator``
-pin the invariants the serving engine leans on:
+``serving.paged.BlockStore`` backs prefix caching + optimistic admission in
+the serving engine.  These pins run without hypothesis (the randomized
+sweeps of the same invariants live in test_paged_kv_properties.py):
 
-  * no block is ever assigned to two lanes at once;
-  * released blocks return to the free list (nothing leaks);
-  * live-block count always equals the sum of per-lane sequence lengths
-    rounded up to block size (allocation is exactly lazy);
-  * a reservation made at admission can always be grown into — ``grow``
-    never runs the pool dry mid-decode.
+  * refcounts never go negative and redistribute correctly under sharing,
+    copy-on-write and release;
+  * a block is freed iff its refcount hits zero AND it leaves the LRU
+    retired pool;
+  * copy-on-write never mutates a block another lane can read;
+  * release (the preemption path) frees exactly the non-shared blocks;
+  * the retired pool evicts oldest-first and revives as LRU hits.
 """
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
-from repro.serving.paged import TRASH_BLOCK, BlockAllocator
+from repro.serving.paged import (BlockStore, OutOfBlocks, TRASH_BLOCK,
+                                 chain_hashes)
 
 
-def _expected_live(alloc, lens):
-    return sum(-(-n // alloc.block_size) for n in lens.values())
+def test_prefix_sharing_and_cow_isolation():
+    """Two lanes admitted with the same content share every full block;
+    copy-on-write gives the writer a fresh block and leaves the reader's
+    view untouched."""
+    bs, n_blocks_each = 2, 3
+    n = n_blocks_each * bs
+    content = list(np.arange(1, n + 1))
+    store = BlockStore(num_blocks=4 * n_blocks_each + 2, block_size=bs,
+                       num_slots=2, max_blocks_per_slot=n_blocks_each + 2)
+    assert store.admit(0, content) == 0  # cold: nothing registered yet
+    store.grow(0, n)
+    store.commit_full(0, content)
+    cached = store.admit(1, content)  # warm: every full block hits
+    assert cached == n
+    assert store.hit_blocks == n_blocks_each
+    donor = list(store._blocks[0])
+    assert store._blocks[1] == donor  # physically shared
+    assert all(store.ref_count(b) == 2 for b in donor)
+    # Sharing is memory, not tokens: 3 live blocks serve 12 logical tokens.
+    assert store.live_blocks == n_blocks_each
+    assert store.live_tokens == 2 * n
+    store.check_invariants()
+
+    # COW on a shared position: lane 1 gets a fresh block, lane 0 keeps
+    # the original, refcount redistributes 2 -> 1+1.
+    mv = store.ensure_writable(1, 0)
+    assert mv is not None
+    src, dst = mv
+    assert src == donor[0] and dst != src
+    assert store._blocks[0][0] == src, "COW mutated the reader's table"
+    assert store.ref_count(src) == 1 and store.ref_count(dst) == 1
+    assert dst not in store._blocks[0]
+    assert store.cow_copies == 1
+    store.check_invariants()
+
+    # The un-shared tail write needs no copy.
+    store.grow(1, n + 1)
+    assert store.ensure_writable(1, n) is None
+    store.check_invariants()
+
+    # Release the sharer: only ITS exclusive blocks drop out; the donor's
+    # blocks stay live with refcount 1 (preemption releases exactly the
+    # non-shared blocks).
+    exclusive = [b for b in store._blocks[1] if store.ref_count(b) == 1]
+    dropped = store.release(1)
+    assert sorted(dropped) == sorted(exclusive)
+    assert all(store.ref_count(b) == 1 for b in donor)
+    store.check_invariants()
 
 
-@settings(max_examples=60, deadline=None)
-@given(st.data())
-def test_random_traces_preserve_invariants(data):
-    """Drive a random admit/grow/release trace; check every invariant after
-    every operation."""
-    num_blocks = data.draw(st.integers(2, 40), label="num_blocks")
-    bs = data.draw(st.integers(1, 8), label="block_size")
-    num_slots = data.draw(st.integers(1, 6), label="num_slots")
-    width = data.draw(st.integers(1, 12), label="table_width")
-    alloc = BlockAllocator(num_blocks, bs, num_slots, width)
+def test_release_pools_registered_blocks_and_lru_revives():
+    """Retired registered blocks park in the LRU pool (not the free list)
+    and a same-prefix admission revives them as an LRU hit."""
+    bs = 2
+    content = [5, 6, 7, 8]
+    store = BlockStore(num_blocks=6, block_size=bs, num_slots=2,
+                       max_blocks_per_slot=4)
+    store.admit(0, content)
+    store.grow(0, 4)
+    store.commit_full(0, content)
+    blocks = list(store._blocks[0])
+    dropped = store.release(0)
+    assert sorted(dropped) == sorted(blocks)
+    assert store.pooled_blocks == 2 and store.num_free == 4
+    assert store.live_blocks == 0  # pooled blocks are reclaimable
 
-    lens = {}      # slot -> current seq len (mirror of the allocator)
-    reserved = {}  # slot -> reserved token budget
-    for _ in range(data.draw(st.integers(1, 40), label="n_ops")):
-        op = data.draw(st.sampled_from(["admit", "grow", "release"]))
-        if op == "admit":
-            free_slots = [s for s in range(num_slots) if s not in lens]
-            if not free_slots:
-                continue
-            slot = data.draw(st.sampled_from(free_slots))
-            tokens = data.draw(st.integers(1, width * bs), label="tokens")
-            if alloc.can_admit(tokens):
-                alloc.admit(slot, tokens)
-                lens[slot] = 0
-                reserved[slot] = tokens
-            else:
-                with pytest.raises(ValueError):
-                    alloc.admit(slot, tokens)
-        elif op == "grow" and lens:
-            slot = data.draw(st.sampled_from(sorted(lens)))
-            # Decode-style growth: anywhere up to the reservation.
-            new_len = data.draw(
-                st.integers(lens[slot], reserved[slot]), label="new_len")
-            fresh = alloc.grow(slot, new_len)
-            lens[slot] = new_len
-            assert all(b != TRASH_BLOCK for b in fresh)
-        elif op == "release" and lens:
-            slot = data.draw(st.sampled_from(sorted(lens)))
-            freed = alloc.release(slot)
-            assert len(freed) == -(-lens[slot] // bs)
-            del lens[slot]
-            del reserved[slot]
-        alloc.check_invariants()
-        assert alloc.live_blocks == _expected_live(alloc, lens)
-        assert alloc.num_free == num_blocks - alloc.live_blocks
+    cached = store.admit(1, content, max_cached_tokens=3)
+    assert cached == 2  # capped to one block (always recompute the tail)
+    assert store._blocks[1] == [blocks[0]]
+    assert store.lru_hits == 1
+    store.check_invariants()
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.integers(1, 6), st.integers(0, 10_000))
-def test_grow_within_reservation_never_fails(bs, seed):
-    """Admission guarantees: once admitted, every lane can grow to its full
-    reservation even when the pool is otherwise fully reserved."""
-    rng = np.random.default_rng(seed)
-    num_slots, width = 4, 8
-    alloc = BlockAllocator(num_blocks=num_slots * width, block_size=bs,
-                           num_slots=num_slots, max_blocks_per_slot=width)
-    budgets = {}
-    for slot in range(num_slots):
-        tokens = int(rng.integers(1, width * bs + 1))
-        if alloc.can_admit(tokens):
-            alloc.admit(slot, tokens)
-            budgets[slot] = tokens
-    # Interleave single-token growth across lanes (decode order is
-    # arbitrary); nothing may ever raise.
-    heads = {s: 0 for s in budgets}
-    while any(heads[s] < budgets[s] for s in budgets):
-        live = [s for s in budgets if heads[s] < budgets[s]]
-        s = live[int(rng.integers(len(live)))]
-        heads[s] += 1
-        alloc.grow(s, heads[s])
-        alloc.check_invariants()
-    for s in budgets:
-        alloc.release(s)
-    alloc.check_invariants()
-    assert alloc.live_blocks == 0 and alloc.num_free == alloc.num_blocks
+def test_lru_eviction_is_oldest_first():
+    """Allocation pressure blanks the OLDEST retiree; newer retirees stay
+    matchable."""
+    bs = 1
+    store = BlockStore(num_blocks=4, block_size=bs, num_slots=2,
+                       max_blocks_per_slot=4)
+    store.admit(0, [1, 2])
+    store.grow(0, 2)
+    store.commit_full(0, [1, 2])
+    store.release(0)          # retires the [1], [1,2] chains (oldest)
+    store.admit(0, [7, 8])
+    store.grow(0, 2)
+    store.commit_full(0, [7, 8])
+    store.release(0)          # retires the [7], [7,8] chains (newest)
+    assert store.pooled_blocks == 4 and store.num_free == 0
+
+    # Two fresh exclusive blocks evict the two oldest pooled blocks.
+    store.admit(1)
+    store.grow(1, 2)
+    assert store.evictions == 2
+    # The [1, 2] chain is gone; the [7, 8] chain still matches.
+    assert store.match_prefix([1, 2]) == 0
+    assert store.match_prefix([7, 8]) == 2
+    store.check_invariants()
 
 
-@settings(max_examples=40, deadline=None)
-@given(st.integers(1, 8), st.lists(st.integers(1, 30), min_size=1,
-                                   max_size=12))
-def test_block_table_rows_match_position_order(bs, lens):
-    """The table maps position p to row blocks[p // bs]: entries appear in
-    allocation order, unallocated tail stays trash."""
+def test_out_of_blocks_and_width_bounds():
+    store = BlockStore(num_blocks=2, block_size=2, num_slots=2,
+                       max_blocks_per_slot=4)
+    store.admit(0)
+    store.grow(0, 4)  # both blocks
+    store.admit(1)
+    with pytest.raises(OutOfBlocks):
+        store.grow(1, 1)
+    store.release(0)  # unregistered blocks -> straight to the free list
+    assert store.num_free == 2
+    store.grow(1, 1)  # now fine
+    with pytest.raises(ValueError):
+        store.grow(1, 9)  # beyond the table width
+    with pytest.raises(ValueError):
+        store.grow(1, 0)  # sequences cannot shrink
+    with pytest.raises(ValueError):
+        store.admit(1)  # double admit
+    store.release(1)
+    with pytest.raises(ValueError):
+        store.release(1)  # double release
+
+
+def test_partial_grow_failure_keeps_state_consistent():
+    """A grow that runs dry mid-way keeps the blocks it did assign (the
+    engine retries after preemption and continues where it left off)."""
+    store = BlockStore(num_blocks=3, block_size=1, num_slots=2,
+                       max_blocks_per_slot=8)
+    store.admit(0)
+    store.grow(0, 2)
+    store.admit(1)
+    with pytest.raises(OutOfBlocks):
+        store.grow(1, 3)  # gets 1 of 3, then dry
+    store.check_invariants()
+    assert store.seq_len(1) == 1  # rounded to what it holds
+    store.release(0)
+    store.grow(1, 3)  # retry completes
+    store.check_invariants()
+
+
+def test_prefix_cache_disabled_degenerates_to_plain_allocator():
+    store = BlockStore(num_blocks=4, block_size=2, num_slots=2,
+                       max_blocks_per_slot=4, prefix_cache=False)
+    content = [1, 2, 3, 4]
+    assert store.admit(0, content) == 0
+    store.grow(0, 4)
+    assert store.commit_full(0, content) == 0
+    store.release(0)
+    assert store.pooled_blocks == 0 and store.num_free == 4
+    assert store.admit(1, content) == 0  # nothing ever matches
+    store.check_invariants()
+
+
+def test_table_rows_match_block_order():
+    """The device table maps position p to row blocks[p // bs]; the
+    unallocated tail stays trash."""
+    bs, lens = 3, [4, 7, 1]
     width = -(-max(lens) // bs)
-    alloc = BlockAllocator(num_blocks=sum(-(-n // bs) for n in lens),
-                           block_size=bs, num_slots=len(lens),
-                           max_blocks_per_slot=width)
+    store = BlockStore(num_blocks=sum(-(-n // bs) for n in lens),
+                       block_size=bs, num_slots=len(lens),
+                       max_blocks_per_slot=width)
     for slot, n in enumerate(lens):
-        alloc.admit(slot, n)
-        alloc.grow(slot, n)
-    table = alloc.block_table()
-    seen = set()
+        store.admit(slot)
+        store.grow(slot, n)
+    table = store.block_table()
     for slot, n in enumerate(lens):
-        blocks = table[slot, :-(-n // bs)]
-        assert TRASH_BLOCK not in blocks
-        assert not (set(blocks.tolist()) & seen), "row shares a block"
-        seen |= set(blocks.tolist())
-        assert (table[slot, -(-n // bs):] == TRASH_BLOCK).all()
-    alloc.check_invariants()
+        k = -(-n // bs)
+        assert list(table[slot, :k]) == store._blocks[slot]
+        assert TRASH_BLOCK not in table[slot, :k]
+        assert (table[slot, k:] == TRASH_BLOCK).all()
+    store.check_invariants()
 
 
-def test_reservation_blocks_oversubscription():
-    """can_admit prices the worst case: a pool of 4 blocks holds two
-    2-block requests but not a third, until one retires."""
-    alloc = BlockAllocator(num_blocks=4, block_size=4, num_slots=3,
-                           max_blocks_per_slot=4)
-    assert alloc.can_admit(8)
-    alloc.admit(0, 8)
-    alloc.admit(1, 8)
-    assert not alloc.can_admit(1)  # fully reserved though nothing is live
-    with pytest.raises(ValueError):
-        alloc.admit(2, 1)
-    alloc.grow(0, 3)  # lazy: one live block, reservation unchanged
-    assert alloc.live_blocks == 1
-    alloc.release(0)
-    assert alloc.can_admit(8)
-
-
-def test_shrink_and_overgrow_rejected():
-    alloc = BlockAllocator(num_blocks=4, block_size=2, num_slots=1,
-                           max_blocks_per_slot=4)
-    alloc.admit(0, 4)
-    alloc.grow(0, 3)
-    with pytest.raises(ValueError):
-        alloc.grow(0, 2)  # sequences cannot shrink
-    with pytest.raises(ValueError):
-        alloc.grow(0, 5)  # beyond the admission reservation
-    with pytest.raises(ValueError):
-        alloc.admit(0, 1)  # double admit
-    alloc.release(0)
-    with pytest.raises(ValueError):
-        alloc.release(0)  # double release
+def test_chain_hash_commits_to_whole_prefix():
+    """Same block content under a different prefix must NOT collide."""
+    a = chain_hashes([1, 2, 3, 4], 2)
+    b = chain_hashes([9, 9, 3, 4], 2)
+    assert a[1] != b[1]
+    assert chain_hashes([1, 2, 3], 2) == a[:1]  # partial tail: no digest

@@ -1,0 +1,121 @@
+"""Ref-counted block store: randomized property sweeps (needs hypothesis).
+
+The deterministic pins of the same invariants live in test_paged_kv.py so
+they run even without hypothesis; these traces sweep the state space:
+
+  * refcounts never go negative and always equal the number of owning lanes;
+  * a block is freed iff its refcount hits zero AND it leaves the LRU pool
+    (the free/pool/live partition in ``check_invariants``);
+  * prefix sharing is sound: lanes share block ``i`` only when their
+    contents agree on every token through block ``i``;
+  * release (the preemption path) frees exactly the non-shared blocks.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paged import BlockStore, OutOfBlocks, TRASH_BLOCK
+
+
+def _shared_prefix_sound(store, contents):
+    """Any block listed by two lanes implies identical content up to and
+    including that block."""
+    bs = store.block_size
+    owners = {}
+    for slot, blocks in store._blocks.items():
+        for idx, b in enumerate(blocks):
+            owners.setdefault(b, []).append((slot, idx))
+    for b, occ in owners.items():
+        if len(occ) < 2:
+            continue
+        (s0, i0) = occ[0]
+        for (s1, i1) in occ[1:]:
+            assert i0 == i1, f"block {b} at different indices"
+            n = (i0 + 1) * bs
+            assert list(contents[s0][:n]) == list(contents[s1][:n]), (
+                f"block {b} shared by lanes with diverging prefixes")
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_random_traces_preserve_invariants(data):
+    """Drive a random admit/grow/commit/cow/release trace over a tiny token
+    alphabet (so prefix collisions actually happen); check every invariant
+    after every operation."""
+    num_blocks = data.draw(st.integers(2, 24), label="num_blocks")
+    bs = data.draw(st.integers(1, 4), label="block_size")
+    num_slots = data.draw(st.integers(1, 5), label="num_slots")
+    width = data.draw(st.integers(1, 8), label="table_width")
+    store = BlockStore(num_blocks, bs, num_slots, width)
+
+    contents = {}  # slot -> full intended token sequence
+    lens = {}      # slot -> grown length (mirror)
+    for _ in range(data.draw(st.integers(1, 50), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["admit", "grow", "commit", "cow", "release"]))
+        if op == "admit":
+            free_slots = [s for s in range(num_slots) if s not in lens]
+            if not free_slots:
+                continue
+            slot = data.draw(st.sampled_from(free_slots))
+            n = data.draw(st.integers(1, width * bs), label="content_len")
+            content = data.draw(st.lists(
+                st.integers(0, 1), min_size=n, max_size=n), label="content")
+            cached = store.admit(slot, content,
+                                 max_cached_tokens=len(content) - 1)
+            assert cached % bs == 0
+            assert cached <= len(content) - 1 or cached == 0
+            contents[slot] = content
+            lens[slot] = cached
+        elif op == "grow" and lens:
+            slot = data.draw(st.sampled_from(sorted(lens)))
+            target = data.draw(
+                st.integers(lens[slot], len(contents[slot])), label="target")
+            try:
+                fresh = store.grow(slot, target)
+                assert all(b != TRASH_BLOCK for b in fresh)
+                # New blocks are exclusive: refcount exactly 1.
+                assert all(store.ref_count(b) == 1 for b in fresh)
+                lens[slot] = target
+            except OutOfBlocks:
+                # Optimistic admission: the engine would preempt.  The
+                # store must stay consistent; replay the grown length.
+                lens[slot] = store.seq_len(slot)
+        elif op == "commit" and lens:
+            slot = data.draw(st.sampled_from(sorted(lens)))
+            store.commit_full(slot, contents[slot][:lens[slot]])
+        elif op == "cow" and lens:
+            slot = data.draw(st.sampled_from(sorted(lens)))
+            if lens[slot] == 0:
+                continue
+            pos = data.draw(st.integers(0, lens[slot] - 1), label="pos")
+            others = {s: list(b) for s, b in store._blocks.items()
+                      if s != slot}
+            try:
+                mv = store.ensure_writable(slot, pos)
+            except OutOfBlocks:
+                continue
+            if mv is not None:
+                src, dst = mv
+                # COW isolation: nobody else's table changed, and the
+                # fresh block is reachable only by the writer.
+                for s, b in others.items():
+                    assert store._blocks[s] == b
+                    assert dst not in b
+                assert store.ref_count(dst) == 1
+        elif op == "release" and lens:
+            slot = data.draw(st.sampled_from(sorted(lens)))
+            before = {b: store.ref_count(b) for b in store._blocks[slot]}
+            dropped = store.release(slot)
+            # Exactly the non-shared blocks left live ownership.
+            assert sorted(dropped) == sorted(
+                b for b, r in before.items() if r == 1)
+            for b, r in before.items():
+                if r > 1:
+                    assert store.ref_count(b) == r - 1  # never negative
+            del lens[slot]
+            del contents[slot]
+        store.check_invariants()
+        _shared_prefix_sound(store, contents)
+        assert store.available == store.num_blocks - store.live_blocks

@@ -134,14 +134,18 @@ def test_submit_rejects_overlong_prompt(tiny):
         eng.submit(np.arange(1, 18), max_new_tokens=2)
 
 
-def test_submit_rejects_zero_budget(tiny):
-    """Both modes reject max_new_tokens < 1 (they used to diverge)."""
+def test_zero_budget_retires_instantly_in_both_modes(tiny):
+    """Both modes complete max_new_tokens < 1 immediately with an empty
+    output (identical semantics; no admission, no KV blocks — they used to
+    diverge, then both rejected)."""
     cfg, params = tiny
     for mode in ("continuous", "wave"):
         eng = ServingEngine(cfg, params, max_batch=1, max_len=16,
                             eos_id=-1, mode=mode)
-        with pytest.raises(ValueError, match="max_new_tokens"):
-            eng.submit(np.arange(1, 5), max_new_tokens=0)
+        uid = eng.submit(np.arange(1, 5), max_new_tokens=0)
+        assert eng.run() == {uid: []}
+        assert eng.stats.admissions == 0
+        assert eng.stats.generated_tokens == 0
 
 
 def test_sampler_greedy_vs_topk():
