@@ -25,17 +25,30 @@ CPU config:
    requests are re-queued and recomputed, and their final outputs are
    asserted identical to the unpressured run.
 
+4. DECODE-KERNEL probe: the paged engine with the Pallas flash-decode
+   kernel forced on (interpret mode on CPU — the parity path, NOT a speed
+   claim) next to the jnp gather reference.  Under the kernel the
+   scheduler must stay bit-transparent (prefix cache on vs off asserted
+   identical); kernel-vs-reference itself is a tolerance property owned
+   by tests/test_kernels.py (fp32 online softmax vs bf16 two-pass).
+
 Reported: decode tokens/s, lane occupancy, mean concurrent requests, KV
 token utilization (can exceed 1.0 under sharing — lanes serve more context
-than the pool stores) and prefix hit-rate — the generate-stage utilization
-gaps the paper's batching analysis (§4.2, Fig 6/8) prices into TCO/token.
+than the pool stores), prefix hit-rate and peak pool bytes — the
+generate-stage utilization gaps the paper's batching analysis (§4.2,
+Fig 6/8) prices into TCO/token.
+
+``--json PATH`` additionally writes the headline numbers as machine-
+readable JSON (CI uploads ``BENCH_serving.json`` from the ``--smoke`` run
+as an artifact, seeding the perf trajectory across PRs).
 
 Run directly (``--smoke`` keeps it CI-sized):
-  PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
+  PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--json PATH]
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -109,11 +122,12 @@ def _run_mode(cfg, params, reqs, kwargs):
     return eng.stats, results
 
 
-def run(smoke: bool = False) -> list[Row]:
+def run(smoke: bool = False, json_path: str | None = None) -> list[Row]:
     n_requests = 6 if smoke else 16
     cfg = get_config(ARCH).reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rows: list[Row] = []
+    bench: dict = {"smoke": smoke, "arch": ARCH, "max_len": MAX_LEN}
 
     # -- 1. mixed trace: wave vs slot vs paged -------------------------------
     reqs = _mixed_trace(cfg, n_requests)
@@ -180,6 +194,60 @@ def run(smoke: bool = False) -> list[Row]:
     rows.append(("serving/preemption", 0.0,
                  f"preemptions={s_tight.preemptions} "
                  f"outputs_identical=True"))
+
+    # -- 4. decode kernel probe ----------------------------------------------
+    # Correctness tripwire: with the kernel ON, the scheduler must stay
+    # bit-transparent (prefix cache on vs off — same greedy outputs).
+    # Kernel-vs-reference is a TOLERANCE property (one-pass fp32 online
+    # softmax vs two-pass bf16 reference; near-tie argmax can flip), so
+    # on-vs-off tok/s are reported side by side but not token-compared —
+    # the per-kernel parity suite in tests/test_kernels.py owns that.
+    kreqs = _shared_trace(cfg, min(n_requests, 6), seed=4)
+    kern = dict(mode="continuous", max_batch=4, block_size=8,
+                num_blocks=KV_BUDGET_TOKENS // 8, prefill_chunk=16)
+    s_koff, _ = _run_mode(cfg, params, kreqs,
+                          dict(kern, decode_kernel="off"))
+    s_kon, out_kon = _run_mode(cfg, params, kreqs,
+                               dict(kern, decode_kernel="on"))
+    _, out_kon_np = _run_mode(
+        cfg, params, kreqs, dict(kern, decode_kernel="on",
+                                 prefix_cache=False))
+    assert out_kon == out_kon_np, (
+        "prefix caching changed greedy outputs under the kernel")
+    rows.append(("serving/decode_kernel", 0.0,
+                 f"tok_s_on={s_kon.tokens_per_s:.1f} "
+                 f"tok_s_off={s_koff.tokens_per_s:.1f} "
+                 f"prefix_invariant_under_kernel=True "
+                 f"peak_pool_bytes={s_kon.peak_pool_bytes}"))
+
+    # -- machine-readable summary (CI artifact) ------------------------------
+    bench.update({
+        "decode_tokens_per_s": {m: stats[m].tokens_per_s for m in stats},
+        "mean_active_requests": {
+            m: stats[m].mean_active_requests for m in stats if m != "wave"},
+        "prefix_cache": {
+            "hit_rate": s_on.prefix_hit_rate,
+            "cached_prompt_tokens": s_on.cached_prompt_tokens,
+            "concurrency_vs_off_x": conc,
+            "block_utilization": s_on.block_utilization,
+            "peak_pool_bytes_on": s_on.peak_pool_bytes,
+            "peak_pool_bytes_off": s_off.peak_pool_bytes,
+        },
+        "preemption": {"tight_pool_preemptions": s_tight.preemptions,
+                       "outputs_identical": True},
+        "decode_kernel": {
+            "on_tokens_per_s": s_kon.tokens_per_s,
+            "off_tokens_per_s": s_koff.tokens_per_s,
+            "prefix_invariant_under_kernel": True,
+            "peak_pool_bytes": s_kon.peak_pool_bytes,
+            "kv_block_bytes": s_kon.kv_block_bytes,
+            "note": "kernel timing is Pallas interpret mode off-TPU "
+                    "(parity path, not a speed claim)",
+        },
+    })
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(bench, f, indent=2, sort_keys=True)
     return rows
 
 
@@ -187,8 +255,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: fewer requests, same assertions")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the headline numbers as JSON "
+                         "(e.g. BENCH_serving.json, uploaded by CI)")
     args = ap.parse_args()
-    for r in run(smoke=args.smoke):
+    for r in run(smoke=args.smoke, json_path=args.json):
         print(",".join(map(str, r)))
 
 

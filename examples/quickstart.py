@@ -66,7 +66,22 @@ def main():
     #   prefix_cache  — block sharing on/off (greedy outputs are
     #                   bit-identical either way);
     #   decode_steps  — decode iterations per host sync (masked early
-    #                   exit on retirement; amortizes dispatch latency).
+    #                   exit on retirement; amortizes dispatch latency);
+    #   decode_kernel — decode-attention implementation: "auto" runs the
+    #                   Pallas flash-decode kernel on TPU (paged: each
+    #                   lane's blocks are walked through its table straight
+    #                   out of the shared pool — KV bytes stream once per
+    #                   token, no dense per-lane gather) and the jnp
+    #                   reference elsewhere; "on" forces the kernel
+    #                   (interpret mode off-TPU), "off" the reference.
+    #                   All scheduling invariants (prefix sharing,
+    #                   preemption, decode_steps) hold bit-identically
+    #                   WITHIN either implementation; across them, logits
+    #                   agree to dtype tolerance (fp32 online softmax vs
+    #                   bf16 two-pass reference);
+    #   preempt_policy— pool-pressure victim selection: "youngest"
+    #                   (default), "largest" (most KV blocks held) or
+    #                   "deadline" (latest submit(deadline=...) first).
     eng = ServingEngine(cfg, params, max_batch=2, max_len=48, eos_id=-1,
                         block_size=8, prefill_chunk=16, prefix_cache=True,
                         decode_steps=1,

@@ -116,6 +116,11 @@ class ModelConfig:
     # KV-cache storage dtype: "bf16" (default) or "f8" (float8_e4m3fn) —
     # halves decode KV bytes/capacity (KVQuant-style, beyond-paper §Perf).
     kv_dtype: str = "bf16"
+    # Decode-attention implementation (kernels.flash_decode.ops):
+    #   "auto" — Pallas flash-decode kernel on TPU, jnp reference elsewhere;
+    #   "on"   — always the kernel (interpret mode off-TPU: the CI path);
+    #   "off"  — always the jnp reference (the dense-gather fallback).
+    decode_kernel: str = "auto"
     # Which shapes this arch skips (with reason) — see DESIGN.md §4.
     skip_shapes: Tuple[Tuple[str, str], ...] = ()
     # Citation provenance for the config values.
@@ -126,6 +131,7 @@ class ModelConfig:
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
         assert self.family in FAMILIES, self.family
+        assert self.decode_kernel in ("auto", "on", "off"), self.decode_kernel
         if self.num_heads and self.num_kv_heads:
             assert self.num_heads % self.num_kv_heads == 0
 

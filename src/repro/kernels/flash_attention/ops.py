@@ -13,8 +13,9 @@ from repro.kernels.flash_attention.ref import attention_ref
 
 def attention(q, k, v, *, causal: bool = True, block_q: int = 128,
               block_k: int = 128):
-    platform = jax.devices()[0].platform
-    if platform == "tpu":
+    # default_backend honors JAX_PLATFORMS and does not force eager device
+    # enumeration (unlike jax.devices()[0].platform).
+    if jax.default_backend() == "tpu":
         return flash_attention(q, k, v, causal=causal, block_q=block_q,
                                block_k=block_k)
     return attention_ref(q, k, v, causal=causal)

@@ -1,10 +1,26 @@
-"""Flash GQA decode Pallas kernel: one new token against a long KV cache.
+"""Flash GQA decode Pallas kernels: one new token against a long KV cache.
 
 Decode is the workload the paper prices (TCO per *generated* token) and is
-purely memory-bound: per token, the kernel streams the KV cache once.  The
-grid is (batch, kv_heads); each program holds the `rep` query heads that
-share one KV head in VMEM and streams that head's K/V in blocks with online
-softmax — KV bytes are read exactly once (the CC-MEM contract).
+purely memory-bound: per token, the kernel streams the KV cache once — the
+CC-MEM contract (PAPER.md §CC-MEM).  Two cache layouts share the math:
+
+  * ``flash_decode``       — contiguous (B, S, Hk, D) caches.  The grid is
+    (batch, kv_heads); each program holds the ``rep`` query heads that share
+    one KV head in VMEM and streams that head's K/V in ``block_k`` tiles
+    with online softmax.  ``lengths`` is per-row: rows of a continuous
+    batch sit at different sequence offsets.
+  * ``paged_flash_decode`` — the serving engine's block-pool layout
+    (N, bs, Hk, D) addressed through per-lane block tables
+    (``serving.paged.BlockStore``).  The grid is (batch, kv_heads,
+    table_width) and the block table rides the scalar-prefetch channel
+    (``PrefetchScalarGridSpec``): the index map resolves ``tables[b, i]``
+    BEFORE the program body runs, so each program's K/V block is DMA'd
+    straight from the shared pool — no dense per-lane copy of the pool is
+    ever materialized (the O(B·T·bs·Hk·D) gather this kernel replaces).
+    The online-softmax accumulator lives in VMEM scratch and persists
+    across the (sequential, innermost) block dimension of the grid; blocks
+    at or beyond a row's length are skipped, and the trash blocks dead
+    lanes' tables point at are naturally masked by ``lengths``.
 """
 from __future__ import annotations
 
@@ -19,12 +35,18 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _pv_dtype(v):
+    """MXU-friendly dtype for the probs @ V matmul: the cache dtype, except
+    f8 (too coarse for probabilities) which is computed in bf16."""
+    return jnp.bfloat16 if v.dtype == jnp.float8_e4m3fn else v.dtype
+
+
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
                    sm_scale: float):
-    """q_ref: (rep, D); k_ref/v_ref: (S, D); len_ref: (1,) in SMEM."""
+    """q_ref: (rep, D); k_ref/v_ref: (S, D); len_ref: (B,) in SMEM."""
     rep, D = q_ref.shape
     S = k_ref.shape[0]
-    length = len_ref[0]
+    length = len_ref[pl.program_id(0)]
     q = q_ref[...].astype(jnp.float32) * sm_scale
 
     def body(i, carry):
@@ -39,7 +61,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
         p = jnp.exp(s - m_new)
         corr = jnp.exp(m - m_new)
         l = l * corr + jnp.sum(p, axis=-1, keepdims=True)
-        acc = acc * corr + p.astype(v.dtype) @ v
+        acc = acc * corr + p.astype(_pv_dtype(v)) @ v.astype(_pv_dtype(v))
         return acc, m_new, l
 
     # Only blocks below `length` contribute.
@@ -53,10 +75,11 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int,
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def flash_decode(q, k_cache, v_cache, length, *, block_k: int = 128,
+def flash_decode(q, k_cache, v_cache, lengths, *, block_k: int = 128,
                  interpret: bool = False):
-    """q: (B, H, D); k_cache/v_cache: (B, S, Hk, D); length: scalar int32
-    (number of valid cache positions). Returns (B, H, D)."""
+    """q: (B, H, D); k_cache/v_cache: (B, S, Hk, D); lengths: scalar int32
+    or a per-row (B,) int32 vector (number of valid cache positions per
+    row).  Returns (B, H, D)."""
     B, H, D = q.shape
     S, Hk = k_cache.shape[1], k_cache.shape[2]
     rep = H // Hk
@@ -66,7 +89,8 @@ def flash_decode(q, k_cache, v_cache, length, *, block_k: int = 128,
     qt = q.reshape(B, Hk, rep, D)
     kt = k_cache.transpose(0, 2, 1, 3)  # (B, Hk, S, D)
     vt = v_cache.transpose(0, 2, 1, 3)
-    lens = jnp.full((1,), length, jnp.int32)
+    lens = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32).reshape(-1), (B,))
 
     grid = (B, Hk)
     out = pl.pallas_call(
@@ -82,4 +106,118 @@ def flash_decode(q, k_cache, v_cache, length, *, block_k: int = 128,
         out_shape=jax.ShapeDtypeStruct((B, Hk, rep, D), q.dtype),
         interpret=interpret,
     )(lens, qt, kt, vt)
+    return out.reshape(B, H, D)
+
+
+def _paged_decode_kernel(lens_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, bs: int, block_k: int,
+                         sm_scale: float):
+    """One program = one pool block of one (row, kv_head) pair.
+
+    lens_ref (B,) / tbl_ref (B, T): scalar-prefetch SMEM (the table also
+    drives the K/V index maps); q_ref (rep, D); k_ref/v_ref (bs, D): THIS
+    grid step's pool block, already resolved through the table; o_ref
+    (rep, D).  acc/m/l: VMEM scratch carrying the online softmax across
+    the T (innermost, sequential) grid dimension.
+    """
+    b, i = pl.program_id(0), pl.program_id(2)
+    T = pl.num_programs(2)
+    length = lens_ref[b]
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Blocks wholly at/beyond the row's length are dead: skip their compute
+    # (their table entries point at the trash block for unallocated tails).
+    @pl.when(i * bs < length)
+    def _block():
+        q = q_ref[...].astype(jnp.float32) * sm_scale
+        for s0 in range(0, bs, block_k):  # static sub-tiling of the block
+            k = k_ref[s0:s0 + block_k, :]
+            v = v_ref[s0:s0 + block_k, :]
+            s = q @ k.astype(jnp.float32).T  # (rep, block_k)
+            pos = i * bs + s0 + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1)
+            s = jnp.where(pos < length, s, NEG_INF)
+            m = m_ref[...]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l_ref[...] = l_ref[...] * corr \
+                + jnp.sum(p, axis=-1, keepdims=True)
+            acc_ref[...] = acc_ref[...] * corr \
+                + p.astype(_pv_dtype(v)) @ v.astype(_pv_dtype(v))
+            m_ref[...] = m_new
+
+    @pl.when(i == T - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def paged_flash_decode(q, k_pool, v_pool, lengths, block_tables, *,
+                       block_k: int = 0, interpret: bool = False):
+    """Decode attention straight out of the paged KV block pool.
+
+    q:            (B, H, D) — one new token per row;
+    k_pool/v_pool:(N, bs, Hk, D) — the SHARED block pool
+                  (``model.init_paged_cache`` layout, trash block included);
+    lengths:      (B,) int32 — valid cache positions per row (dead lanes'
+                  lengths only cover trash blocks, so their output is
+                  garbage that the caller's active mask discards);
+    block_tables: (B, T) int32 — per-lane table mapping block index
+                  ``j`` to the pool block holding positions
+                  [j*bs, (j+1)*bs); unallocated entries point at the trash
+                  block and are masked by ``lengths``.
+    block_k:      inner tile over a block's token dim (<= bs; 0 => whole
+                  block per step).  Rounded down to a divisor of ``bs`` so
+                  a caller tuned for the dense kernel's 128 can pass the
+                  same value against any pool block size.
+
+    Returns (B, H, D).  KV bytes are read exactly once per token, block by
+    block through the table — never gathered into a per-lane dense copy.
+    """
+    B, H, D = q.shape
+    bs, Hk = k_pool.shape[1], k_pool.shape[2]
+    T = block_tables.shape[1]
+    rep = H // Hk
+    bk = bs if block_k <= 0 else min(block_k, bs)
+    while bs % bk:
+        bk -= 1
+    sm_scale = 1.0 / math.sqrt(D)
+    qt = q.reshape(B, Hk, rep, D)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # lengths, block_tables
+        grid=(B, Hk, T),
+        in_specs=[
+            pl.BlockSpec((None, None, rep, D),
+                         lambda b, h, i, lens, tbl: (b, h, 0, 0)),
+            # The pool is indexed THROUGH the prefetched table: each grid
+            # step DMAs exactly one shared block for one kv head.
+            pl.BlockSpec((None, bs, None, D),
+                         lambda b, h, i, lens, tbl: (tbl[b, i], 0, h, 0)),
+            pl.BlockSpec((None, bs, None, D),
+                         lambda b, h, i, lens, tbl: (tbl[b, i], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, rep, D),
+                               lambda b, h, i, lens, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, D), jnp.float32),  # acc
+            pltpu.VMEM((rep, 1), jnp.float32),  # running max
+            pltpu.VMEM((rep, 1), jnp.float32),  # running denom
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_decode_kernel, bs=bs, block_k=bk,
+                          sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hk, rep, D), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), jnp.asarray(block_tables, jnp.int32),
+      qt, k_pool, v_pool)
     return out.reshape(B, H, D)

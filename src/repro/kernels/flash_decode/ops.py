@@ -1,13 +1,74 @@
-"""Jit'd public wrapper for flash decode with CPU fallback."""
+"""Public decode-attention entry point: one call, both cache layouts.
+
+``decode_attention`` is what ``models.layers.attention_decode`` (and
+therefore ``model.decode_step`` and the serving engine's jitted decode
+window) dispatches through.  Layout is selected by ``block_tables``
+(None = contiguous (B, S, Hk, D) caches; else the (N, bs, Hk, D) block
+pool), and the implementation by the ``kernel`` knob:
+
+  * ``"auto"`` (default) — the Pallas kernel on TPU, the jnp reference
+    elsewhere.  The probe is ``jax.default_backend()`` (respects
+    JAX_PLATFORMS, no eager device enumeration) combined with this
+    explicit knob — NOT ``jax.devices()[0].platform``, which forces
+    device initialization and ignores how the caller placed its arrays.
+  * ``"on"``   — always the kernel; off-TPU it runs in Pallas interpret
+    mode (the CI/CPU parity path — bit-for-bit the kernel's math, executed
+    by the interpreter).
+  * ``"off"``  — always the jnp reference (the pre-kernel gather path).
+
+The knob threads down from ``ModelConfig.decode_kernel`` /
+``ServingEngine(decode_kernel=...)`` / ``launch.serve --decode-kernel``.
+"""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.flash_decode.flash_decode import flash_decode
-from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.flash_decode.flash_decode import (flash_decode,
+                                                     paged_flash_decode)
+from repro.kernels.flash_decode.ref import decode_ref, paged_decode_ref
+
+DECODE_KERNEL_MODES = ("auto", "on", "off")
 
 
-def decode_attention(q, k_cache, v_cache, length, *, block_k: int = 128):
-    if jax.devices()[0].platform == "tpu":
-        return flash_decode(q, k_cache, v_cache, length, block_k=block_k)
-    return decode_ref(q, k_cache, v_cache, length)
+def resolve_kernel(kernel: str = "auto"):
+    """-> (use_kernel, interpret) for the current backend."""
+    if kernel not in DECODE_KERNEL_MODES:
+        raise ValueError(
+            f"decode kernel mode {kernel!r} not in {DECODE_KERNEL_MODES}")
+    on_tpu = jax.default_backend() == "tpu"
+    use_kernel = on_tpu if kernel == "auto" else kernel == "on"
+    return use_kernel, use_kernel and not on_tpu
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_tables=None,
+                     kernel: str = "auto", block_k: int = 128):
+    """One decode-attention step.
+
+    q: (B, H, D) — the new token's (rotated) queries;
+    k_cache/v_cache: (B, S, Hk, D) contiguous caches, OR — when
+        ``block_tables`` (B, T) int32 is given — the shared (N, bs, Hk, D)
+        block pool they index;
+    lengths: scalar or (B,) int32 valid positions per row.
+
+    Returns (B, H, D).  The caller owns the cache scatter of the new K/V;
+    this is the read side only.
+    """
+    use_kernel, interpret = resolve_kernel(kernel)
+    if block_tables is not None:
+        if not use_kernel:
+            return paged_decode_ref(q, k_cache, v_cache, lengths,
+                                    block_tables)
+        return paged_flash_decode(q, k_cache, v_cache, lengths, block_tables,
+                                  block_k=block_k, interpret=interpret)
+    if not use_kernel:
+        return decode_ref(q, k_cache, v_cache, lengths)
+    S = k_cache.shape[1]
+    bk = min(block_k, S)
+    while S % bk:  # largest divisor of S at most block_k
+        bk -= 1
+    if bk < 8 and bk < S:
+        # Degenerate tiling (e.g. prime S): a token-at-a-time kernel loop
+        # would be far slower than the fused reference — use that instead.
+        return decode_ref(q, k_cache, v_cache, lengths)
+    return flash_decode(q, k_cache, v_cache, lengths, block_k=bk,
+                        interpret=interpret)

@@ -1,4 +1,15 @@
-"""Pure-jnp oracle for flash decode."""
+"""Pure-jnp oracles for flash decode (dense and paged layouts).
+
+``decode_ref`` reproduces ``models.layers._sdpa`` arithmetic EXACTLY
+(compute-dtype score einsum, fp32 masked softmax, compute-dtype probs @ V):
+it is both the kernel parity oracle and the engine's CPU fallback, so the
+serving bit-identity matrix (tests/test_continuous_batching.py) holds
+bitwise against the pre-kernel gather path.  Masked lanes score ``-1e30``,
+which underflows to an exact 0 after the softmax's max-subtraction —
+results are therefore independent of how much dead padding the cache
+carries, which is what makes dense (S_max) and paged (table_width * bs)
+layouts bit-comparable.
+"""
 from __future__ import annotations
 
 import math
@@ -7,17 +18,37 @@ import jax
 import jax.numpy as jnp
 
 
-def decode_ref(q, k_cache, v_cache, length):
-    """q: (B, H, D); caches: (B, S, Hk, D); length: scalar -> (B, H, D)."""
+def decode_ref(q, k_cache, v_cache, lengths):
+    """q: (B, H, D); caches: (B, S, Hk, D); lengths: scalar int32 or (B,)
+    valid positions per row -> (B, H, D)."""
     B, H, D = q.shape
     S, Hk = k_cache.shape[1], k_cache.shape[2]
     rep = H // Hk
-    qf = q.astype(jnp.float32).reshape(B, Hk, rep, D)
-    kf = k_cache.astype(jnp.float32)
-    vf = v_cache.astype(jnp.float32)
-    s = jnp.einsum("bhrd,bkhd->bhrk", qf, kf) / math.sqrt(D)
-    mask = jnp.arange(S)[None, None, None, :] < length
-    s = jnp.where(mask, s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhrk,bkhd->bhrd", p, vf)
-    return o.reshape(B, H, D).astype(q.dtype)
+    lens = jnp.broadcast_to(
+        jnp.asarray(lengths, jnp.int32).reshape(-1), (B,))
+    qg = q.reshape(B, 1, Hk, rep, D)
+    k = k_cache.astype(q.dtype)
+    v = v_cache.astype(q.dtype)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(D)
+    mask = jnp.arange(S)[None] < lens[:, None]  # (B, S)
+    scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v)
+    return out.reshape(B, H, D)
+
+
+def paged_decode_ref(q, k_pool, v_pool, lengths, block_tables):
+    """Gather oracle for the paged kernel: resolve each lane's block table
+    into a dense per-lane cache copy, then run ``decode_ref``.
+
+    q: (B, H, D); pools: (N, bs, Hk, D); lengths: (B,) int32;
+    block_tables: (B, T) int32.  This MATERIALIZES the (B, T*bs, Hk, D)
+    copy the kernel exists to avoid — it is the correctness oracle (and the
+    ``decode_kernel="off"`` fallback), not the hot path.
+    """
+    B = q.shape[0]
+    Hk, D = k_pool.shape[2], k_pool.shape[3]
+    kc = k_pool[block_tables].reshape(B, -1, Hk, D)
+    vc = v_pool[block_tables].reshape(B, -1, Hk, D)
+    return decode_ref(q, kc, vc, lengths)

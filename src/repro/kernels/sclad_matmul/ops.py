@@ -34,7 +34,7 @@ class SCLDLinear:
 
     def __call__(self, x, interpret: bool | None = None):
         if interpret is None:
-            interpret = jax.devices()[0].platform != "tpu"
+            interpret = jax.default_backend() != "tpu"
         if interpret and x.shape[0] > 512:
             # Interpret mode is slow — fall back to the oracle for big calls.
             return sclad_matmul_ref(x, self.vals, self.rows)

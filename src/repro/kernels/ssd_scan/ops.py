@@ -16,6 +16,6 @@ def ssd(x, dt, A, b, c, *, chunk: int = 128):
     """
     xdt = x * dt[..., None]
     a = dt * A[:, None]
-    if jax.devices()[0].platform == "tpu":
+    if jax.default_backend() == "tpu":
         return ssd_scan(xdt, a, b, c, chunk=chunk)
     return ssd_scan_ref(xdt, a, b, c)

@@ -48,6 +48,19 @@ def main():
                     help="decode iterations per jitted step / host sync "
                          "(masked early-exit on retirement; >1 amortizes "
                          "dispatch latency over several tokens)")
+    ap.add_argument("--decode-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="decode-attention implementation: the Pallas "
+                         "flash-decode kernel (paged: walks the block "
+                         "table straight out of the shared KV pool) on "
+                         "TPU with 'auto', forced everywhere with 'on' "
+                         "(interpret mode off-TPU), or the jnp reference "
+                         "with 'off'")
+    ap.add_argument("--preempt-policy", default="youngest",
+                    choices=["youngest", "largest", "deadline"],
+                    help="which in-flight request pool pressure preempts: "
+                         "most recently submitted, most KV blocks held, "
+                         "or latest deadline")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request (exercises the prefix cache)")
@@ -64,6 +77,7 @@ def main():
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefill_chunk=args.prefill_chunk or None,
         prefix_cache=args.prefix_cache, decode_steps=args.decode_steps,
+        decode_kernel=args.decode_kernel, preempt_policy=args.preempt_policy,
         sampler=SamplerConfig(temperature=args.temperature, top_k=50))
 
     rng = np.random.default_rng(args.seed)
@@ -72,7 +86,16 @@ def main():
         plen = int(rng.integers(4, 17))
         prompt = np.concatenate(
             [system, rng.integers(1, cfg.vocab_size, size=plen)])
-        engine.submit(prompt, max_new_tokens=args.max_new)
+        deadline = None
+        if args.preempt_policy == "deadline":
+            # Demo deadlines: arrival order + a work proxy, so requests
+            # with more remaining work have more slack and are the ones
+            # preempted under pool pressure (without this the policy
+            # would see only deadline-less requests and degenerate to
+            # youngest-first).
+            deadline = float(i + len(prompt) + args.max_new)
+        engine.submit(prompt, max_new_tokens=args.max_new,
+                      deadline=deadline)
     results = engine.run()
     for uid, toks in sorted(results.items())[:4]:
         print(f"req {uid}: {toks[:16]}{'...' if len(toks) > 16 else ''}")

@@ -272,8 +272,12 @@ def attention_decode(
 
     x: (B, 1, d); position: scalar int OR a per-row (B,) int vector — rows
     of a batch may sit at different sequence offsets (continuous batching).
-    The new K/V is scattered into each row's own cache index and the
-    attention mask is per-row.
+    The new K/V is scattered into each row's own cache index, then the
+    attention READ dispatches through the single
+    ``kernels.flash_decode.ops.decode_attention`` entry point (per-row
+    lengths = position + 1), selected by ``cfg.decode_kernel``: the Pallas
+    flash-decode kernel on TPU (interpret mode when forced on elsewhere) or
+    the jnp reference.
 
     Two cache layouts:
       * dense (block_tables=None): k_cache/v_cache are (B, S_max, Hk, D)
@@ -282,48 +286,48 @@ def attention_decode(
         blocks shared by all rows, and ``block_tables`` (B, T) int32 maps
         row b's block index j//bs to a pool block (serving.paged hands these
         out; unallocated entries point at the trash block).  The new K/V is
-        scattered through the table and the context is gathered back
-        block-by-block.  With prefix caching, SEVERAL rows' tables may name
-        the same (ref-counted) block: the gather reads it concurrently,
-        which is safe because the host-side store guarantees the scattered
-        write position always lands in a block exclusive to its row (fresh
-        growth or copy-on-write — ``BlockStore.ensure_writable``).
+        scattered through the table and the kernel walks each row's blocks
+        through the table directly out of the shared pool — no dense
+        per-lane copy of the pool is materialized on this path (the
+        ``"off"`` fallback gathers, as the pre-kernel engine did).  With
+        prefix caching, SEVERAL rows' tables may name the same
+        (ref-counted) block: concurrent reads are safe because the
+        host-side store guarantees the scattered write position always
+        lands in a block exclusive to its row (fresh growth or
+        copy-on-write — ``BlockStore.ensure_writable``).
 
     Returns (out (B,1,d), k_cache, v_cache).
     """
+    from repro.kernels.flash_decode import ops as decode_ops
+
     B = x.shape[0]
     q, k, v = _project_qkv(cfg, p, x, x)
     pos = jnp.broadcast_to(jnp.asarray(position, jnp.int32), (B,))
     if use_rope:
         q = apply_rope(cfg, q, pos[:, None])
         k = apply_rope(cfg, k, pos[:, None])
+    lengths = pos + 1  # row b's valid cache positions, incl. the new token
     if block_tables is None:
-        S_max = k_cache.shape[1]
         rows = jnp.arange(B)
         k_cache = k_cache.at[rows, pos].set(k[:, 0].astype(k_cache.dtype))
         v_cache = v_cache.at[rows, pos].set(v[:, 0].astype(v_cache.dtype))
-        kc, vc = k_cache, v_cache
-        # Mask out positions beyond each row's current one.
-        valid = (jnp.arange(S_max)[None] <= pos[:, None])
+        out = decode_ops.decode_attention(
+            q[:, 0], k_cache.astype(x.dtype), v_cache.astype(x.dtype),
+            lengths, kernel=cfg.decode_kernel)
     else:
         bs = k_cache.shape[1]
-        Hk, D = k.shape[2], k.shape[3]
         rows = jnp.arange(B)
         # Dead lanes carry all-trash tables, so their writes land in the
-        # trash block and cannot clobber a block re-assigned to a live lane.
+        # trash block and cannot clobber a block re-assigned to a live lane
+        # (their stale ``lengths`` only ever cover trash blocks, which the
+        # caller's active mask keeps out of every live result).
         blk = block_tables[rows, pos // bs]
         k_cache = k_cache.at[blk, pos % bs].set(k[:, 0].astype(k_cache.dtype))
         v_cache = v_cache.at[blk, pos % bs].set(v[:, 0].astype(v_cache.dtype))
-        # Gather each row's context in block-table order: block j covers
-        # positions [j*bs, (j+1)*bs), so the flattened gather reads exactly
-        # like a dense stripe (garbage from trash/unwritten tails is dead
-        # under the position mask).
-        kc = k_cache[block_tables].reshape(B, -1, Hk, D)
-        vc = v_cache[block_tables].reshape(B, -1, Hk, D)
-        valid = (jnp.arange(kc.shape[1])[None] <= pos[:, None])
-    out = _sdpa(cfg, q, kc.astype(x.dtype), vc.astype(x.dtype),
-                valid[:, None, None, None, :])
-    return out @ p["wo"], k_cache, v_cache
+        out = decode_ops.decode_attention(
+            q[:, 0], k_cache, v_cache, lengths, block_tables=block_tables,
+            kernel=cfg.decode_kernel)
+    return out.reshape(B, 1, -1).astype(x.dtype) @ p["wo"], k_cache, v_cache
 
 
 # ---------------------------------------------------------------------------

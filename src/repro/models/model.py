@@ -635,8 +635,12 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
 
     block_tables: optional (B, T) int32 — the cache is a paged block pool
     (``init_paged_cache``) addressed per row through this table instead of
-    a dense (L, B, ctx) stripe; attention K/V reads gather over the table
-    (dense/moe/vlm only).
+    a dense (L, B, ctx) stripe (dense/moe/vlm only).  Per layer, attention
+    reads dispatch through ``kernels.flash_decode.ops.decode_attention``
+    with the (pool, block_tables, lengths = position + 1) calling
+    convention: on the kernel path (``cfg.decode_kernel``) each row's
+    blocks are walked through the table straight out of the shared pool —
+    no dense per-lane copy of the pool is materialized.
 
     Returns (logits (B, 1, vocab), updated cache).
     """

@@ -41,7 +41,15 @@ worst-case reservation:
   * **multi-step decode** (``decode_steps=k``): the jitted step runs k
     decode iterations per host sync (``lax.scan`` with masked early-exit on
     EOS/budget retirement), amortizing dispatch + device->host latency over
-    k tokens.  Defaults to 1 (bit-identical to the single-step engine).
+    k tokens.  Defaults to 1 (bit-identical to the single-step engine);
+  * **fused paged decode attention**: the jitted decode step's attention
+    reads go through ``kernels.flash_decode.ops.decode_attention`` — on
+    TPU the Pallas flash-decode kernel walks each lane's blocks through
+    its table straight out of the shared pool (KV bytes streamed exactly
+    once per token, the CC-MEM contract), instead of first gathering a
+    dense O(B*T*bs*Hk*D) per-lane copy of the pool.  ``decode_kernel``
+    selects the implementation ("auto"/"on"/"off"; "on" uses Pallas
+    interpret mode off-TPU — the CI parity path).
 
 Correctness contract (pinned by tests/test_continuous_batching.py): greedy
 outputs are bit-identical with prefix caching on or off, across concurrent
@@ -59,12 +67,18 @@ Knobs (see also examples/quickstart.py):
   * ``prefix_cache`` — block sharing on/off (off: every block exclusive,
     released blocks return straight to the free list).
   * ``decode_steps`` — decode iterations per jitted step / host sync.
+  * ``decode_kernel`` — decode-attention implementation ("auto" = kernel
+    on TPU / reference elsewhere; "on" forces the kernel, interpret mode
+    off-TPU; "off" forces the jnp reference).
+  * ``preempt_policy`` — pool-pressure victim selection: "youngest"
+    (default), "largest" (most blocks held) or "deadline" (latest
+    ``submit(deadline=...)`` evicted first).
 
 vlm note: the patch prefix is part of each lane's cache, so its positions
-enter the hash chain as sentinel ids.  This engine always feeds the zero
-patch stub, making the prefix identical across requests and therefore
-shareable; if real per-request patch embeddings land, their digest must
-join the chain.
+enter the hash chain as sentinel ids and the PATCH-EMBEDDING DIGEST seeds
+the lane's chain root: requests submitted with the same image (or both
+with the zero stub, the default) share the prefix; identical token ids
+with different images can never false-share.
 
 Families with attention KV caches (dense, moe, vlm) run this continuous
 path.  SSM/hybrid/audio recurrent state cannot be left-pad-masked without
@@ -80,8 +94,9 @@ and nothing leaks into ambient sharding state.
 from __future__ import annotations
 
 import functools
+import hashlib
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -89,14 +104,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels.flash_decode.ops import DECODE_KERNEL_MODES
 from repro.models import model as M
 from repro.parallel import sharding
-from repro.serving.paged import (BlockStore, OutOfBlocks, TRASH_BLOCK,
-                                 chain_hashes)
+from repro.serving.paged import (BlockStore, CHAIN_ROOT, OutOfBlocks,
+                                 TRASH_BLOCK, chain_hashes)
 from repro.serving.sampler import SamplerConfig, sample
 
 # Families whose KV cache supports block-level admission (see module doc).
 CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
+
+#: Victim-selection policies for pool-pressure preemption.
+PREEMPT_POLICIES = ("youngest", "largest", "deadline")
 
 
 @dataclass
@@ -106,6 +125,17 @@ class Request:
     max_new_tokens: int
     output: List[int] = field(default_factory=list)
     done: bool = False
+    #: Soft completion deadline (any monotone unit; only ORDER matters) —
+    #: consumed by preempt_policy="deadline".  None = no deadline.
+    deadline: Optional[float] = None
+    #: vlm only: per-request patch embeddings (num_patches, d_model); None
+    #: = the engine-constant zero stub.
+    patch_embeds: Optional[np.ndarray] = None
+    #: sha256 chain-root seed derived from patch_embeds (vlm) or the
+    #: global CHAIN_ROOT — two requests may share prefix blocks only if
+    #: their seeds agree, so identical token ids with different images
+    #: never false-share.
+    chain_seed: bytes = CHAIN_ROOT
 
 
 @dataclass
@@ -140,6 +170,13 @@ class EngineStats:
     decode_steps: int = 0
     admissions: int = 0
     preemptions: int = 0
+    # Peak PHYSICAL pool occupancy: blocks referenced by >= 1 lane at the
+    # worst moment (retired-but-resident LRU blocks do NOT count — they
+    # are reclaimable).  This is the number CC-MEM capacity planning
+    # prices.  kv_block_bytes is device bytes per block across all
+    # layers, K+V (filled in by the engine).
+    peak_live_blocks: int = 0
+    kv_block_bytes: int = 0
     # Occupancy: active lanes summed over decode steps vs. lane capacity.
     occupied_slot_steps: int = 0
     slot_steps: int = 0
@@ -178,6 +215,11 @@ class EngineStats:
         TCO/token."""
         return self.used_token_steps / max(self.pool_token_steps, 1)
 
+    @property
+    def peak_pool_bytes(self) -> int:
+        """Peak device bytes held by live KV blocks."""
+        return self.peak_live_blocks * self.kv_block_bytes
+
 
 def _bucket(n: int, cap: int) -> int:
     """Smallest power-of-two >= n (min 8), capped at cap."""
@@ -196,7 +238,9 @@ class ServingEngine:
                  num_blocks: Optional[int] = None,
                  prefill_chunk: Optional[int] = 32,
                  prefix_cache: bool = True,
-                 decode_steps: int = 1):
+                 decode_steps: int = 1,
+                 decode_kernel: Optional[str] = None,
+                 preempt_policy: str = "youngest"):
         """mode: "auto" (continuous where the family supports it),
         "continuous" (error if unsupported) or "wave" (force the legacy
         lockstep baseline).
@@ -204,9 +248,31 @@ class ServingEngine:
         block_size / num_blocks / prefill_chunk / prefix_cache /
         decode_steps: paged-KV and scheduler knobs, see the module
         docstring.
+
+        decode_kernel: overrides ``cfg.decode_kernel`` — "auto" (Pallas
+        flash-decode kernel on TPU, jnp reference elsewhere), "on" (always
+        the kernel; interpret mode off-TPU) or "off" (always the
+        reference).  None keeps the config's setting.
+
+        preempt_policy: which in-flight request pool pressure evicts —
+        "youngest" (highest uid; the default, matches prior behavior),
+        "largest" (most KV blocks held: frees the most memory per
+        eviction) or "deadline" (latest ``submit(deadline=...)`` first;
+        requests without a deadline are evicted before any with one).
         """
         if decode_steps < 1:
             raise ValueError("decode_steps must be >= 1")
+        if preempt_policy not in PREEMPT_POLICIES:
+            raise ValueError(
+                f"preempt_policy {preempt_policy!r} not in "
+                f"{PREEMPT_POLICIES}")
+        if decode_kernel is not None:
+            if decode_kernel not in DECODE_KERNEL_MODES:
+                raise ValueError(
+                    f"decode_kernel {decode_kernel!r} not in "
+                    f"{DECODE_KERNEL_MODES}")
+            cfg = dc_replace(cfg, decode_kernel=decode_kernel)
+        self.preempt_policy = preempt_policy
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
@@ -268,7 +334,14 @@ class ServingEngine:
         return wrapped
 
     # -- public API ----------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32,
+               deadline: Optional[float] = None,
+               patch_embeds: Optional[np.ndarray] = None) -> int:
+        """Queue a request.  ``deadline`` feeds preempt_policy="deadline";
+        ``patch_embeds`` (vlm only, (num_patches, d_model)) is the
+        request's image frontend — its digest seeds the prefix-cache hash
+        chain, so only requests with the SAME image (or both the zero
+        stub) can share prefix blocks."""
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) >= self.max_len:
             # Same bound in both modes (and regardless of budget): wave
@@ -277,6 +350,16 @@ class ServingEngine:
             raise ValueError(
                 f"prompt length {len(prompt)} leaves no decode room in a "
                 f"{self.max_len}-token cache")
+        if patch_embeds is not None:
+            if self.cfg.family != "vlm":
+                raise ValueError(
+                    f"patch_embeds is vlm-only (family is "
+                    f"{self.cfg.family!r})")
+            patch_embeds = np.asarray(patch_embeds, np.float32)
+            want = (self.cfg.num_patches, self.cfg.d_model)
+            if patch_embeds.shape != want:
+                raise ValueError(
+                    f"patch_embeds shape {patch_embeds.shape} != {want}")
         self._uid += 1
         uid = self._uid
         if max_new_tokens < 1:
@@ -293,8 +376,24 @@ class ServingEngine:
                     f"request needs {need} KV blocks but the pool/block "
                     f"table caps at {cap}; it can never be admitted "
                     f"(raise num_blocks or shorten the prompt/budget)")
-        self._queue.append(Request(uid, prompt, max_new_tokens))
+        self._queue.append(Request(
+            uid, prompt, max_new_tokens, deadline=deadline,
+            patch_embeds=patch_embeds,
+            chain_seed=self._chain_seed(patch_embeds)))
         return uid
+
+    def _chain_seed(self, patch_embeds: Optional[np.ndarray]) -> bytes:
+        """Per-request prefix-cache chain root.  Non-vlm content is fully
+        determined by token ids -> the global root; vlm K/V additionally
+        depends on the image, so the patch embeddings' digest is folded in
+        (the None zero-stub gets its own constant seed, preserving
+        stub-to-stub sharing)."""
+        if self.cfg.family != "vlm":
+            return CHAIN_ROOT
+        if patch_embeds is None:
+            return hashlib.sha256(CHAIN_ROOT + b"|vlm-zero-stub").digest()
+        return hashlib.sha256(
+            CHAIN_ROOT + patch_embeds.tobytes()).digest()
 
     def step(self) -> List[Tuple[int, List[int]]]:
         """One scheduler iteration: admit queued requests onto free lanes
@@ -332,6 +431,7 @@ class ServingEngine:
                 alive=lambda i=i: bool(self._host_active[i]))
         if not self._host_active.any():
             return finished
+        self._note_peak()
         tables = jnp.asarray(self._alloc.block_table())
 
         t0 = time.perf_counter()
@@ -410,6 +510,10 @@ class ServingEngine:
         self._cache = M.init_paged_cache(cfg, self.num_blocks + 1, bs)
         if self._mesh is not None:
             self._cache = self._place_cache(self._mesh, self._cache)
+        # Device bytes per pool block, all layers, K+V (axis 1 is blocks).
+        self.kv_block_bytes = sum(
+            int(np.prod(x.shape)) // x.shape[1] * x.dtype.itemsize
+            for x in (self._cache["k"], self._cache["v"]))
         ldtype = self.params["embed"].dtype
         self._logits = jnp.zeros((B, cfg.vocab_size), ldtype)
         self._pos = jnp.zeros((B,), jnp.int32)
@@ -473,12 +577,20 @@ class ServingEngine:
             donate_argnums=(1, 2, 3, 4, 5) if donate else ())
         # One jit per (first/continuation) handles every (group size,
         # bucket) shape combination; power-of-two buckets keep the number
-        # of retraces small.
-        self._prefill_first = jax.jit(
-            self._scoped(
-                lambda p, c, t, ln, bt: M.prefill_slots(cfg, p, c, t, ln,
-                                                        bt)),
-            donate_argnums=(1,) if donate else ())
+        # of retraces small.  vlm first chunks take the cohort's (possibly
+        # per-request) patch embeddings explicitly.
+        if cfg.family == "vlm":
+            self._prefill_first = jax.jit(
+                self._scoped(
+                    lambda p, c, t, ln, bt, pe: M.prefill_slots(
+                        cfg, p, c, t, ln, bt, patch_embeds=pe)),
+                donate_argnums=(1,) if donate else ())
+        else:
+            self._prefill_first = jax.jit(
+                self._scoped(
+                    lambda p, c, t, ln, bt: M.prefill_slots(cfg, p, c, t, ln,
+                                                            bt)),
+                donate_argnums=(1,) if donate else ())
         self._prefill_cont = jax.jit(
             self._scoped(
                 lambda p, c, t, ln, bt, st: M.prefill_slots(
@@ -506,9 +618,11 @@ class ServingEngine:
 
     def _content_ids(self, r: Request) -> np.ndarray:
         """Token ids at each cache position, for the prefix-cache hash
-        chain: sentinel -1 per vlm patch position (the patch stub is
-        engine-constant, see module docstring), then prompt, then generated
-        tokens."""
+        chain: sentinel -1 per vlm patch position, then prompt, then
+        generated tokens.  The sentinel alone does NOT identify the patch
+        content — the request's ``chain_seed`` (patch-embedding digest)
+        commits the whole chain to the image, which is what makes the
+        sentinel sound; do not drop the seed as redundant."""
         return np.concatenate([
             np.full(self._prefix, -1, np.int64),
             np.asarray(r.prompt, np.int64),
@@ -526,23 +640,41 @@ class ServingEngine:
         hit = self._digest_cache.get(r.uid)
         if hit is not None and hit[0] == n:
             return hit[1]
-        digests = chain_hashes(self._content_ids(r), self._alloc.block_size)
+        digests = chain_hashes(self._content_ids(r), self._alloc.block_size,
+                               seed=r.chain_seed)
         self._digest_cache[r.uid] = (n, digests)
         return digests
 
     # -- preemption ----------------------------------------------------------
-    def _youngest(self):
-        """The most recently submitted in-flight request: ("lane", i) or
-        ("prefill", s).  Re-queued preempted requests keep their uid, so
+    def _victim_key(self, r: Request, lane: int):
+        """Sort key for victim selection — the MAX key is preempted.
+        Re-queued preempted requests keep their uid, so under "youngest"
         they age back into protection once re-admitted."""
-        best, best_uid = None, -1
+        if self.preempt_policy == "largest":
+            return (self._alloc.owned_blocks(lane), r.uid)
+        if self.preempt_policy == "deadline":
+            # Latest deadline has the most slack to absorb a recompute;
+            # deadline-less requests are evicted before any with one.
+            d = float("inf") if r.deadline is None else float(r.deadline)
+            return (d, r.uid)
+        return (r.uid,)  # youngest
+
+    def _select_victim(self):
+        """The in-flight request ``preempt_policy`` evicts under pool
+        pressure: ("lane", i) or ("prefill", s), or None if nothing is in
+        flight."""
+        best, best_key = None, None
         for i in np.nonzero(self._host_active)[0]:
             r = self._slot_req[int(i)]
-            if r is not None and r.uid > best_uid:
-                best, best_uid = ("lane", int(i)), r.uid
+            if r is None:
+                continue
+            key = self._victim_key(r, int(i))
+            if best_key is None or key > best_key:
+                best, best_key = ("lane", int(i)), key
         for s in self._prefilling:
-            if s.req.uid > best_uid:
-                best, best_uid = ("prefill", s), s.req.uid
+            key = self._victim_key(s.req, s.lane)
+            if best_key is None or key > best_key:
+                best, best_key = ("prefill", s), key
         return best
 
     def _preempt(self, victim) -> None:
@@ -581,7 +713,7 @@ class ServingEngine:
                 op()
                 return True
             except OutOfBlocks:
-                victim = self._youngest()
+                victim = self._select_victim()
                 # The growing request is itself in flight, so a victim
                 # always exists (possibly the grower).
                 assert victim is not None, "OutOfBlocks with no live request"
@@ -609,6 +741,11 @@ class ServingEngine:
             for src, dst in moved:
                 self._copy_block(src, dst)
         return True
+
+    def _note_peak(self) -> None:
+        self.stats.kv_block_bytes = self.kv_block_bytes
+        self.stats.peak_live_blocks = max(self.stats.peak_live_blocks,
+                                          self._alloc.live_blocks)
 
     def _copy_block(self, src: int, dst: int) -> None:
         """Device-side copy-on-write payload copy (all layers of one
@@ -646,7 +783,7 @@ class ServingEngine:
             cached_len = self._alloc.admit(
                 lane, digests=digests if self.prefix_cache else None,
                 max_cached_tokens=self._prefix + eff_len - 1,
-                min_cached_tokens=self._prefix)
+                min_cached_tokens=self._prefix, seed=r.chain_seed)
             self._digest_cache.pop(r.uid, None)
             consumed = max(0, cached_len - self._prefix)
             self.stats.cached_prompt_tokens += consumed
@@ -689,6 +826,7 @@ class ServingEngine:
         # had already grown — drop it, or its chunk would be written into
         # released blocks and the preempted request wrongly activated.
         ready = [(s, t) for (s, t) in ready if s in self._prefilling]
+        self._note_peak()
         if not ready:
             return
         cohort, takes = [s for s, _ in ready], [t for _, t in ready]
@@ -706,9 +844,21 @@ class ServingEngine:
 
         t0 = time.perf_counter()
         if first:
-            logits_new, self._cache = self._prefill_first(
-                self.params, self._cache, jnp.asarray(tokens),
-                jnp.asarray(lengths), tables)
+            if self.cfg.family == "vlm":
+                # Per-request images; the zero stub for requests without.
+                pe = np.zeros((n, self.cfg.num_patches, self.cfg.d_model),
+                              np.float32)
+                for j, (s, _) in enumerate(zip(cohort, takes)):
+                    if s.req.patch_embeds is not None:
+                        pe[j] = s.req.patch_embeds
+                logits_new, self._cache = self._prefill_first(
+                    self.params, self._cache, jnp.asarray(tokens),
+                    jnp.asarray(lengths), tables,
+                    jnp.asarray(pe).astype(jnp.bfloat16))
+            else:
+                logits_new, self._cache = self._prefill_first(
+                    self.params, self._cache, jnp.asarray(tokens),
+                    jnp.asarray(lengths), tables)
         else:
             logits_new, self._cache = self._prefill_cont(
                 self.params, self._cache, jnp.asarray(tokens),
@@ -793,8 +943,12 @@ class ServingEngine:
         toks = np.stack([r.prompt for r in wave]).astype(np.int32)
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.family == "vlm":
-            batch["patch_embeds"] = jnp.zeros(
-                (B, self.cfg.num_patches, self.cfg.d_model), jnp.bfloat16)
+            pe = np.zeros((B, self.cfg.num_patches, self.cfg.d_model),
+                          np.float32)
+            for i, r in enumerate(wave):
+                if r.patch_embeds is not None:
+                    pe[i] = r.patch_embeds
+            batch["patch_embeds"] = jnp.asarray(pe).astype(jnp.bfloat16)
         if self.cfg.family == "audio":
             batch["frames"] = jnp.zeros(
                 (B, self.cfg.encdec.encoder_seq_len, self.cfg.d_model),

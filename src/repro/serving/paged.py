@@ -65,11 +65,13 @@ class OutOfBlocks(RuntimeError):
     """
 
 
-_CHAIN_ROOT = b"kv-chain-root"
+CHAIN_ROOT = b"kv-chain-root"
+_CHAIN_ROOT = CHAIN_ROOT  # back-compat alias
 
 
 def chain_hashes(content: Sequence[int], block_size: int,
-                 prefix: Sequence[bytes] = ()) -> List[bytes]:
+                 prefix: Sequence[bytes] = (),
+                 seed: bytes = CHAIN_ROOT) -> List[bytes]:
     """Digest per FULL block of ``content``: sha256(parent || tokens).
 
     The chain makes a block's identity commit to its whole prefix — two
@@ -81,10 +83,16 @@ def chain_hashes(content: Sequence[int], block_size: int,
     reused verbatim and only the remaining blocks are hashed (the
     incremental path ``commit_full`` uses so per-token decode cost stays
     O(1) amortized instead of re-hashing the whole sequence).
+
+    ``seed``: the chain root.  Token ids alone don't always determine the
+    cached K/V — a vlm request's patch prefix depends on its IMAGE, which
+    the engine folds in here as a per-request patch-embedding digest, so
+    two requests with identical token ids but different images can never
+    share blocks.
     """
     n_full = len(content) // block_size
     out: List[bytes] = list(prefix[:n_full])
-    prev = out[-1] if out else _CHAIN_ROOT
+    prev = out[-1] if out else seed
     for i in range(len(out), n_full):
         blk = np.asarray(content[i * block_size:(i + 1) * block_size],
                          np.int64)
@@ -130,6 +138,8 @@ class BlockStore:
         #: decode extends the chain incrementally instead of re-hashing
         #: the sequence from position 0 every window).
         self._chain: Dict[int, List[bytes]] = {}
+        #: slot -> chain-root seed (per-request for vlm patch digests).
+        self._seed: Dict[int, bytes] = {}
         self._table = np.zeros((num_slots, max_blocks_per_slot), np.int32)
         # Counters for EngineStats / benchmarks.
         self.hit_blocks = 0    # blocks reused through the prefix index
@@ -171,6 +181,11 @@ class BlockStore:
     def seq_len(self, slot: int) -> int:
         return self._len.get(slot, 0)
 
+    def owned_blocks(self, slot: int) -> int:
+        """Blocks currently referenced by the slot (shared ones included) —
+        what a preemption of this slot can drop references to."""
+        return len(self._blocks.get(slot, ()))
+
     def ref_count(self, block: int) -> int:
         return self._ref.get(block, 0)
 
@@ -181,7 +196,8 @@ class BlockStore:
 
     def match_prefix(self, content: Sequence[int],
                      max_cached_tokens: Optional[int] = None,
-                     min_cached_tokens: int = 0) -> int:
+                     min_cached_tokens: int = 0,
+                     seed: bytes = CHAIN_ROOT) -> int:
         """Number of leading FULL blocks of ``content`` resident in the
         store (live or pooled), after the caps admission applies:
 
@@ -194,7 +210,7 @@ class BlockStore:
         """
         if not self.prefix_cache:
             return 0
-        return self._match(chain_hashes(content, self.block_size),
+        return self._match(chain_hashes(content, self.block_size, seed=seed),
                            max_cached_tokens, min_cached_tokens)
 
     def match_digests(self, digests: Sequence[bytes],
@@ -230,7 +246,8 @@ class BlockStore:
     def admit(self, slot: int, content: Optional[Sequence[int]] = None,
               max_cached_tokens: Optional[int] = None,
               min_cached_tokens: int = 0,
-              digests: Optional[Sequence[bytes]] = None) -> int:
+              digests: Optional[Sequence[bytes]] = None,
+              seed: bytes = CHAIN_ROOT) -> int:
         """Open a lane; start it with every cached prefix block of
         ``content`` (token ids, from cache position 0).  Takes a reference
         on each matched block — pooled blocks are revived, live ones are
@@ -241,6 +258,11 @@ class BlockStore:
         when the caller already hashed for its admission policy, so the
         prompt is hashed once per admission, not twice.
 
+        ``seed``: the lane's chain-root seed (see ``chain_hashes``) —
+        remembered for the lane's own ``commit_full`` registrations, so a
+        request's blocks are only ever matchable by requests with the SAME
+        seed (e.g. the same vlm patch-embedding digest).
+
         There is NO capacity reservation: admission policy (how much room
         must be available before admitting) is the caller's job.
         """
@@ -249,10 +271,11 @@ class BlockStore:
         self._blocks[slot] = []
         self._len[slot] = 0
         self._chain[slot] = []
+        self._seed[slot] = seed
         if (content is None and digests is None) or not self.prefix_cache:
             return 0
         if digests is None:
-            digests = chain_hashes(content, self.block_size)
+            digests = chain_hashes(content, self.block_size, seed=seed)
         else:
             digests = list(digests)
         n = self._match(digests, max_cached_tokens, min_cached_tokens)
@@ -377,7 +400,8 @@ class BlockStore:
         # so a decode loop calling this every window hashes each block
         # once, not the whole sequence every token.
         chain = chain_hashes(content[:n_full * self.block_size],
-                             self.block_size, prefix=self._chain[slot])
+                             self.block_size, prefix=self._chain[slot],
+                             seed=self._seed[slot])
         self._chain[slot] = chain
         added = 0
         for i, h in enumerate(chain):
@@ -413,6 +437,7 @@ class BlockStore:
         self._table[slot] = TRASH_BLOCK
         del self._len[slot]
         del self._chain[slot]
+        del self._seed[slot]
         return dropped
 
     # -- invariants (exercised by tests/test_paged_kv.py) --------------------
@@ -444,6 +469,7 @@ class BlockStore:
             assert self._index.get(h) == b, "hash map entry not indexed"
             assert b in live or b in pool
         assert set(self._chain) == set(self._blocks), "chain cache leaked"
+        assert set(self._seed) == set(self._blocks), "seed map leaked"
         for slot, chain in self._chain.items():
             assert len(chain) <= len(self._blocks[slot])
         expect = sum(self.blocks_for(n) for n in self._len.values())

@@ -11,8 +11,9 @@ import pytest
 
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.flash_decode.flash_decode import flash_decode
-from repro.kernels.flash_decode.ref import decode_ref
+from repro.kernels.flash_decode.flash_decode import (flash_decode,
+                                                    paged_flash_decode)
+from repro.kernels.flash_decode.ref import decode_ref, paged_decode_ref
 from repro.kernels.sclad_matmul.sclad_matmul import (
     block_compress, decompress, sclad_matmul)
 from repro.kernels.sclad_matmul.ref import sclad_matmul_ref
@@ -66,6 +67,126 @@ def test_flash_decode(B, H, Hk, D, S, length, dtype):
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32),
         atol=tol(dtype), rtol=tol(dtype))
+
+
+def test_flash_decode_per_row_lengths():
+    """Rows of a continuous batch sit at different offsets: a (B,) lengths
+    vector must reproduce per-row scalar-length runs exactly."""
+    B, H, Hk, D, S = 4, 8, 2, 64, 256
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, H, D))
+    kc = jax.random.normal(ks[1], (B, S, Hk, D))
+    vc = jax.random.normal(ks[2], (B, S, Hk, D))
+    lengths = jnp.asarray([1, 127, 128, 256], jnp.int32)
+    out = flash_decode(q, kc, vc, lengths, interpret=True)
+    ref = decode_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    # Row b of the batched run == a solo run at that row's scalar length.
+    for b in range(B):
+        solo = flash_decode(q[b:b + 1], kc[b:b + 1], vc[b:b + 1],
+                            lengths[b], interpret=True)
+        np.testing.assert_array_equal(np.asarray(out[b]),
+                                      np.asarray(solo[0]))
+
+
+# ---------------------------------------------------------------------------
+# paged flash decode (block-pool layout, tables via scalar prefetch)
+# ---------------------------------------------------------------------------
+
+def _build_pool(rng_seed, B, Hk, D, bs, T, lengths, dtype,
+                dead_lanes=()):
+    """A shared pool + per-row tables: unique blocks per live row in random
+    pool order, TRASH (0) for unallocated tails and for dead lanes."""
+    n_blocks = 1 + sum(-(-int(l) // bs) for l in lengths)
+    N = n_blocks + 2  # a couple of never-referenced blocks
+    ks = jax.random.split(jax.random.PRNGKey(rng_seed), 3)
+    k_pool = jax.random.normal(ks[0], (N, bs, Hk, D)).astype(dtype)
+    v_pool = jax.random.normal(ks[1], (N, bs, Hk, D)).astype(dtype)
+    rng = np.random.default_rng(rng_seed)
+    free = list(rng.permutation(np.arange(1, N)))
+    tables = np.zeros((B, T), np.int32)
+    for b in range(B):
+        if b in dead_lanes:
+            continue
+        for j in range(-(-int(lengths[b]) // bs)):
+            tables[b, j] = free.pop()
+    return k_pool, v_pool, jnp.asarray(tables)
+
+
+@pytest.mark.parametrize("B,H,Hk,D,bs,T", [
+    (3, 8, 2, 64, 8, 4),    # GQA rep=4
+    (2, 4, 4, 32, 4, 6),    # MHA, small blocks
+    (4, 8, 1, 64, 16, 2),   # MQA, bigger blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_decode(B, H, Hk, D, bs, T, dtype):
+    """Uneven per-row lengths (full table, single token, mid-block)
+    against the dense-gather oracle."""
+    rng = np.random.default_rng(5)
+    lengths = np.asarray(
+        [T * bs, 1] + [int(rng.integers(2, T * bs)) for _ in range(B - 2)],
+        np.int32)[:B]
+    k_pool, v_pool, tables = _build_pool(7, B, Hk, D, bs, T, lengths, dtype)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, H, D)).astype(dtype)
+    out = paged_flash_decode(q, k_pool, v_pool, jnp.asarray(lengths), tables,
+                             interpret=True)
+    ref = paged_decode_ref(q, k_pool, v_pool, jnp.asarray(lengths), tables)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+
+
+@pytest.mark.parametrize("block_k", [3, 4, 128])
+def test_paged_flash_decode_block_k_mismatch(block_k):
+    """The kernel's inner tile need not match the pool block size: any
+    requested block_k (even the dense kernel's 128, or a non-divisor) is
+    rounded to a divisor of bs without changing results."""
+    B, H, Hk, D, bs, T = 2, 4, 2, 32, 8, 3
+    lengths = np.asarray([T * bs, 11], np.int32)
+    k_pool, v_pool, tables = _build_pool(11, B, Hk, D, bs, T, lengths,
+                                         jnp.float32)
+    q = jax.random.normal(jax.random.PRNGKey(13), (B, H, D))
+    ref = paged_decode_ref(q, k_pool, v_pool, jnp.asarray(lengths), tables)
+    out = paged_flash_decode(q, k_pool, v_pool, jnp.asarray(lengths), tables,
+                             block_k=block_k, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_flash_decode_trash_lanes():
+    """Dead lanes (all-trash tables — retired/preempted slots in the
+    engine) walk only the trash block; live lanes are unaffected and the
+    dead lanes' outputs equal the oracle's on the same masked garbage."""
+    B, H, Hk, D, bs, T = 3, 4, 2, 32, 4, 4
+    lengths = np.asarray([13, 1, 6], np.int32)  # row 1 is dead
+    k_pool, v_pool, tables = _build_pool(17, B, Hk, D, bs, T, lengths,
+                                         jnp.float32, dead_lanes=(1,))
+    q = jax.random.normal(jax.random.PRNGKey(19), (B, H, D))
+    out = paged_flash_decode(q, k_pool, v_pool, jnp.asarray(lengths), tables,
+                             interpret=True)
+    ref = paged_decode_ref(q, k_pool, v_pool, jnp.asarray(lengths), tables)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_paged_flash_decode_shared_blocks():
+    """Two lanes whose tables name the SAME pool blocks (prefix sharing)
+    read them concurrently without interference."""
+    B, H, Hk, D, bs, T = 2, 4, 2, 32, 4, 3
+    lengths = np.asarray([9, 6], np.int32)
+    k_pool, v_pool, tables = _build_pool(23, B, Hk, D, bs, T, lengths,
+                                         jnp.float32)
+    tables = np.asarray(tables).copy()
+    tables[1, 0] = tables[0, 0]  # shared prefix block
+    tables = jnp.asarray(tables)
+    q = jax.random.normal(jax.random.PRNGKey(29), (B, H, D))
+    out = paged_flash_decode(q, k_pool, v_pool, jnp.asarray(lengths), tables,
+                             interpret=True)
+    ref = paged_decode_ref(q, k_pool, v_pool, jnp.asarray(lengths), tables)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
 
 
 # ---------------------------------------------------------------------------
