@@ -25,18 +25,22 @@ CPU config:
    requests are re-queued and recomputed, and their final outputs are
    asserted identical to the unpressured run.
 
-4. DECODE-KERNEL probe: the paged engine with the Pallas flash-decode
-   kernel forced on (interpret mode on CPU — the parity path, NOT a speed
-   claim) next to the jnp gather reference.  Under the kernel the
+4. ATTN-KERNEL probe: the paged engine with the Pallas kernels (paged
+   flash-decode AND paged flash-prefill with its fused K/V scatter)
+   forced on (interpret mode on CPU — the parity path, NOT a speed
+   claim) next to the jnp gather references.  Under the kernels the
    scheduler must stay bit-transparent (prefix cache on vs off asserted
    identical); kernel-vs-reference itself is a tolerance property owned
    by tests/test_kernels.py (fp32 online softmax vs bf16 two-pass).
+   Prefill tok/s and mean TTFT (submit -> first token) are reported for
+   both implementations so the prefill-side trajectory is visible next
+   to the decode numbers.
 
-Reported: decode tokens/s, lane occupancy, mean concurrent requests, KV
-token utilization (can exceed 1.0 under sharing — lanes serve more context
-than the pool stores), prefix hit-rate and peak pool bytes — the
-generate-stage utilization gaps the paper's batching analysis (§4.2,
-Fig 6/8) prices into TCO/token.
+Reported: decode tokens/s, prefill tokens/s, mean TTFT, lane occupancy,
+mean concurrent requests, KV token utilization (can exceed 1.0 under
+sharing — lanes serve more context than the pool stores), prefix hit-rate
+and peak pool bytes — the generate-stage utilization gaps the paper's
+batching analysis (§4.2, Fig 6/8) prices into TCO/token.
 
 ``--json PATH`` additionally writes the headline numbers as machine-
 readable JSON (CI uploads ``BENCH_serving.json`` from the ``--smoke`` run
@@ -195,34 +199,47 @@ def run(smoke: bool = False, json_path: str | None = None) -> list[Row]:
                  f"preemptions={s_tight.preemptions} "
                  f"outputs_identical=True"))
 
-    # -- 4. decode kernel probe ----------------------------------------------
-    # Correctness tripwire: with the kernel ON, the scheduler must stay
-    # bit-transparent (prefix cache on vs off — same greedy outputs).
-    # Kernel-vs-reference is a TOLERANCE property (one-pass fp32 online
-    # softmax vs two-pass bf16 reference; near-tie argmax can flip), so
-    # on-vs-off tok/s are reported side by side but not token-compared —
-    # the per-kernel parity suite in tests/test_kernels.py owns that.
+    # -- 4. attn kernel probe ------------------------------------------------
+    # Correctness tripwire: with the kernels ON (decode AND prefill), the
+    # scheduler must stay bit-transparent (prefix cache on vs off — same
+    # greedy outputs).  Kernel-vs-reference is a TOLERANCE property
+    # (one-pass fp32 online softmax vs two-pass bf16 reference; near-tie
+    # argmax can flip), so on-vs-off tok/s are reported side by side but
+    # not token-compared — the per-kernel parity suite in
+    # tests/test_kernels.py owns that.  The shared-prefix trace makes
+    # every admission a prefix-hit CONTINUATION chunk, i.e. the exact path
+    # the paged flash-prefill kernel fuses (table-walked context + in-
+    # kernel K/V scatter); off-TPU both implementations run on CPU (the
+    # kernels through the Pallas interpreter), so tok/s here tracks the
+    # parity path's cost, not TPU speed.
     kreqs = _shared_trace(cfg, min(n_requests, 6), seed=4)
     kern = dict(mode="continuous", max_batch=4, block_size=8,
                 num_blocks=KV_BUDGET_TOKENS // 8, prefill_chunk=16)
     s_koff, _ = _run_mode(cfg, params, kreqs,
-                          dict(kern, decode_kernel="off"))
+                          dict(kern, attn_kernel="off"))
     s_kon, out_kon = _run_mode(cfg, params, kreqs,
-                               dict(kern, decode_kernel="on"))
+                               dict(kern, attn_kernel="on"))
     _, out_kon_np = _run_mode(
-        cfg, params, kreqs, dict(kern, decode_kernel="on",
+        cfg, params, kreqs, dict(kern, attn_kernel="on",
                                  prefix_cache=False))
     assert out_kon == out_kon_np, (
         "prefix caching changed greedy outputs under the kernel")
-    rows.append(("serving/decode_kernel", 0.0,
+    rows.append(("serving/attn_kernel", 0.0,
                  f"tok_s_on={s_kon.tokens_per_s:.1f} "
                  f"tok_s_off={s_koff.tokens_per_s:.1f} "
+                 f"prefill_tok_s_on={s_kon.prefill_tokens_per_s:.1f} "
+                 f"prefill_tok_s_off={s_koff.prefill_tokens_per_s:.1f} "
+                 f"ttft_on={s_kon.mean_ttft_s * 1e3:.1f}ms "
+                 f"ttft_off={s_koff.mean_ttft_s * 1e3:.1f}ms "
                  f"prefix_invariant_under_kernel=True "
                  f"peak_pool_bytes={s_kon.peak_pool_bytes}"))
 
     # -- machine-readable summary (CI artifact) ------------------------------
     bench.update({
         "decode_tokens_per_s": {m: stats[m].tokens_per_s for m in stats},
+        "prefill_tokens_per_s": {
+            m: stats[m].prefill_tokens_per_s for m in stats},
+        "mean_ttft_s": {m: stats[m].mean_ttft_s for m in stats},
         "mean_active_requests": {
             m: stats[m].mean_active_requests for m in stats if m != "wave"},
         "prefix_cache": {
@@ -235,14 +252,31 @@ def run(smoke: bool = False, json_path: str | None = None) -> list[Row]:
         },
         "preemption": {"tight_pool_preemptions": s_tight.preemptions,
                        "outputs_identical": True},
+        # One entry per attn_kernel mode exercised by the probe; the
+        # legacy "decode_kernel" key is kept for artifact continuity
+        # across PRs (same numbers, pre-PR-5 spelling).
+        "attn_kernel": {
+            "modes": {"probe_on": "on", "probe_off": "off",
+                      "mixed_and_prefix_traces": "auto"},
+            "on_tokens_per_s": s_kon.tokens_per_s,
+            "off_tokens_per_s": s_koff.tokens_per_s,
+            "on_prefill_tokens_per_s": s_kon.prefill_tokens_per_s,
+            "off_prefill_tokens_per_s": s_koff.prefill_tokens_per_s,
+            "on_mean_ttft_s": s_kon.mean_ttft_s,
+            "off_mean_ttft_s": s_koff.mean_ttft_s,
+            "prefix_invariant_under_kernel": True,
+            "peak_pool_bytes": s_kon.peak_pool_bytes,
+            "kv_block_bytes": s_kon.kv_block_bytes,
+            "note": "kernel timing is Pallas interpret mode off-TPU "
+                    "(parity path, not a speed claim)",
+        },
         "decode_kernel": {
             "on_tokens_per_s": s_kon.tokens_per_s,
             "off_tokens_per_s": s_koff.tokens_per_s,
             "prefix_invariant_under_kernel": True,
             "peak_pool_bytes": s_kon.peak_pool_bytes,
             "kv_block_bytes": s_kon.kv_block_bytes,
-            "note": "kernel timing is Pallas interpret mode off-TPU "
-                    "(parity path, not a speed claim)",
+            "note": "deprecated alias of attn_kernel",
         },
     })
     if json_path:

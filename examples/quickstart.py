@@ -67,18 +67,24 @@ def main():
     #                   bit-identical either way);
     #   decode_steps  — decode iterations per host sync (masked early
     #                   exit on retirement; amortizes dispatch latency);
-    #   decode_kernel — decode-attention implementation: "auto" runs the
-    #                   Pallas flash-decode kernel on TPU (paged: each
-    #                   lane's blocks are walked through its table straight
-    #                   out of the shared pool — KV bytes stream once per
-    #                   token, no dense per-lane gather) and the jnp
-    #                   reference elsewhere; "on" forces the kernel
-    #                   (interpret mode off-TPU), "off" the reference.
-    #                   All scheduling invariants (prefix sharing,
-    #                   preemption, decode_steps) hold bit-identically
-    #                   WITHIN either implementation; across them, logits
-    #                   agree to dtype tolerance (fp32 online softmax vs
-    #                   bf16 two-pass reference);
+    #   attn_kernel   — attention-kernel implementation for BOTH paged hot
+    #                   paths: "auto" runs the Pallas kernels on TPU and
+    #                   the jnp references elsewhere; "on" forces the
+    #                   kernels (interpret mode off-TPU), "off" the
+    #                   references.  Decode walks each lane's blocks
+    #                   through its table straight out of the shared pool
+    #                   (KV bytes stream once per token, no dense per-lane
+    #                   gather); chunked prefill streams the cached
+    #                   context the same way, derives its causal/left-pad
+    #                   mask from scalars in-kernel (no dense (B, S, S)
+    #                   mask) and scatters the chunk's new K/V into the
+    #                   pool inside the same kernel call.  All scheduling
+    #                   invariants (prefix sharing, preemption,
+    #                   decode_steps) hold bit-identically WITHIN either
+    #                   implementation; across them, logits agree to dtype
+    #                   tolerance (fp32 online softmax vs bf16 two-pass
+    #                   reference).  decode_kernel= is the deprecated
+    #                   PR-4 spelling (DeprecationWarning);
     #   preempt_policy— pool-pressure victim selection: "youngest"
     #                   (default), "largest" (most KV blocks held) or
     #                   "deadline" (latest submit(deadline=...) first).
@@ -102,6 +108,8 @@ def main():
               f"prefix hit-rate {eng.stats.prefix_hit_rate:.0%}") \
         if eng.mode == "continuous" else ""
     print(f"decode throughput: {eng.stats.tokens_per_s:.1f} tok/s, "
+          f"prefill {eng.stats.prefill_tokens_per_s:.1f} tok/s, "
+          f"mean TTFT {eng.stats.mean_ttft_s * 1e3:.1f}ms, "
           f"lane occupancy {eng.stats.slot_occupancy:.0%}{blocks} (CPU)")
 
 

@@ -116,11 +116,14 @@ class ModelConfig:
     # KV-cache storage dtype: "bf16" (default) or "f8" (float8_e4m3fn) —
     # halves decode KV bytes/capacity (KVQuant-style, beyond-paper §Perf).
     kv_dtype: str = "bf16"
-    # Decode-attention implementation (kernels.flash_decode.ops):
-    #   "auto" — Pallas flash-decode kernel on TPU, jnp reference elsewhere;
-    #   "on"   — always the kernel (interpret mode off-TPU: the CI path);
-    #   "off"  — always the jnp reference (the dense-gather fallback).
-    decode_kernel: str = "auto"
+    # Attention-kernel implementation for BOTH serving hot paths — paged
+    # flash-decode (kernels.flash_decode.ops) and paged flash-prefill
+    # (kernels.flash_prefill.ops):
+    #   "auto" — the Pallas kernels on TPU, jnp references elsewhere;
+    #   "on"   — always the kernels (interpret mode off-TPU: the CI path);
+    #   "off"  — always the jnp references (the dense-gather fallbacks).
+    # (Formerly ``decode_kernel``, which remains readable as a property.)
+    attn_kernel: str = "auto"
     # Which shapes this arch skips (with reason) — see DESIGN.md §4.
     skip_shapes: Tuple[Tuple[str, str], ...] = ()
     # Citation provenance for the config values.
@@ -131,9 +134,16 @@ class ModelConfig:
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
         assert self.family in FAMILIES, self.family
-        assert self.decode_kernel in ("auto", "on", "off"), self.decode_kernel
+        assert self.attn_kernel in ("auto", "on", "off"), self.attn_kernel
         if self.num_heads and self.num_kv_heads:
             assert self.num_heads % self.num_kv_heads == 0
+
+    @property
+    def decode_kernel(self) -> str:
+        """Deprecated alias of ``attn_kernel`` (the knob now selects the
+        prefill kernel too).  Kept readable so pre-PR-5 call sites keep
+        working; new code should read ``attn_kernel``."""
+        return self.attn_kernel
 
     @property
     def is_attention_free(self) -> bool:

@@ -16,8 +16,13 @@ pool), and the implementation by the ``kernel`` knob:
     by the interpreter).
   * ``"off"``  — always the jnp reference (the pre-kernel gather path).
 
-The knob threads down from ``ModelConfig.decode_kernel`` /
-``ServingEngine(decode_kernel=...)`` / ``launch.serve --decode-kernel``.
+The knob threads down from ``ModelConfig.attn_kernel`` /
+``ServingEngine(attn_kernel=...)`` / ``launch.serve --attn-kernel``; the
+same knob selects the prefill-side ``kernels.flash_prefill`` twin.
+Deprecated spellings: ``ServingEngine(decode_kernel=...)`` and
+``--decode-kernel`` still map onto ``attn_kernel`` (DeprecationWarning),
+and ``cfg.decode_kernel`` remains readable as a property — but
+``ModelConfig(decode_kernel=...)`` construction is gone with the field.
 """
 from __future__ import annotations
 

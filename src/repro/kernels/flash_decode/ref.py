@@ -45,7 +45,7 @@ def paged_decode_ref(q, k_pool, v_pool, lengths, block_tables):
     q: (B, H, D); pools: (N, bs, Hk, D); lengths: (B,) int32;
     block_tables: (B, T) int32.  This MATERIALIZES the (B, T*bs, Hk, D)
     copy the kernel exists to avoid — it is the correctness oracle (and the
-    ``decode_kernel="off"`` fallback), not the hot path.
+    ``attn_kernel="off"`` fallback), not the hot path.
     """
     B = q.shape[0]
     Hk, D = k_pool.shape[2], k_pool.shape[3]

@@ -1,0 +1,254 @@
+"""Paged flash-prefill Pallas kernel: chunked-prefill attention straight
+out of the block-pool KV cache, with the new-token K/V scatter fused in.
+
+This is the prefill-side twin of ``kernels.flash_decode.paged_flash_decode``
+and removes the last dense gather from the serving engine's hot path.  The
+chunked-prefill continuation step — the path every prefix-cache hit,
+long-prompt chunk and preemption recompute takes — previously materialized,
+PER LAYER, a dense per-lane copy of the shared KV pool
+(``k_pool[block_tables]``: O(B*T*bs*Hk*D) bytes) plus a host-built dense
+(B, S, S+T*bs) mask, then round-tripped the chunk's compacted K/V through
+HBM again as a separate ``.at[].set`` scatter.  Here instead:
+
+  * the grid is (batch, kv_heads, T_read + W): the first ``T_read`` steps
+    walk the lane's block table on the scalar-prefetch channel
+    (``PrefetchScalarGridSpec`` — the index map resolves ``tbl[b, i]``
+    BEFORE the body runs), streaming cached context K/V block by block
+    straight out of the shared (N, bs, Hk, D) pool with online softmax in
+    VMEM scratch (CC-MEM: each cached KV byte crosses HBM exactly once);
+  * the causal/left-pad mask is derived INSIDE the kernel from the
+    ``start``/``lengths`` scalars and the static ``prefix`` — no dense
+    (B, S, S) mask is ever built;
+  * step ``T_read`` adds the in-chunk self-attention (keys = this chunk's
+    K, masked causally with pad keys dropped), fusing what used to be the
+    concatenated tail of the dense mask;
+  * the last ``W`` steps SCATTER the chunk's new-token K/V into the pool
+    through the table (``input_output_aliases`` pins the pool in place):
+    each step merges one destination block — old rows kept, new rows
+    placed by a one-hot (bs, S) matmul that folds the left-pad compaction
+    (dest ``start + j`` reads padded row ``j + pad``) — so compacted K/V
+    never round-trips through HBM as a separate scatter.
+
+Write-target blocks are exclusive to their lane (the engine's grow +
+copy-on-write barrier runs before prefill), so the in-place pool update
+can never be observed by a concurrently-read shared block; steps whose
+block index clamps past the row's real write span re-merge identical
+content (idempotent) or copy the old block through unchanged.
+
+CI exercises the kernel in Pallas interpret mode (CPU); the BlockSpecs /
+grid are the TPU deployment artifacts and real-TPU validation remains
+open (see ROADMAP).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pv_dtype(v):
+    """MXU-friendly dtype for the probs @ V matmul: the operand dtype,
+    except f8 (too coarse for probabilities) which is computed in bf16."""
+    return jnp.bfloat16 if v.dtype == jnp.float8_e4m3fn else v.dtype
+
+
+def _prefill_kernel(len_ref, start_ref, tbl_ref, q_ref, kn_ref, vn_ref,
+                    kp_ref, vp_ref, o_ref, ko_ref, vo_ref,
+                    acc_ref, m_ref, l_ref, *, bs: int, prefix: int,
+                    t_read: int, sm_scale: float):
+    """One program = one grid step of one (row, kv_head) pair.
+
+    len/start (B,) and tbl (B, T): scalar-prefetch SMEM (the table also
+    drives the pool index maps); q_ref (S*rep, D); kn/vn_ref (S, D): the
+    chunk's rotated K/V for THIS kv head; kp/vp_ref (bs, D): this step's
+    pool block resolved through the table — cached context on read steps,
+    the scatter destination's old content on write steps; o_ref (S*rep, D);
+    ko/vo_ref (bs, D): the (aliased) pool block being written back.
+    acc/m/l: VMEM scratch carrying the online softmax across the
+    (innermost, sequential) grid dimension.
+    """
+    b, i = pl.program_id(0), pl.program_id(2)
+    n_i = pl.num_programs(2)
+    T = tbl_ref.shape[1]
+    S, D = kn_ref.shape
+    rows = q_ref.shape[0]
+    rep = rows // S
+    P = S - prefix
+    length = len_ref[b]
+    start = start_ref[b]
+    pad = P - length
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def online_update(s, v):
+        """Fold scores s (rows, K) and values v (K, D) into acc/m/l."""
+        m = m_ref[...]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr \
+            + p.astype(_pv_dtype(v)) @ v.astype(_pv_dtype(v))
+        m_ref[...] = m_new
+
+    # Context phase: blocks wholly at/beyond the row's cached length are
+    # dead (their table entries point at the trash block); context is
+    # query-independent — every cached position < start is visible to the
+    # whole chunk (all chunk positions are causally after it).
+    @pl.when((i < t_read) & (i * bs < start))
+    def _ctx():
+        q = q_ref[...].astype(jnp.float32) * sm_scale
+        k = kp_ref[...]
+        s = q @ k.astype(jnp.float32).T  # (rows, bs)
+        pos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(pos < start, s, NEG_INF)
+        online_update(s, vp_ref[...])
+
+    # In-chunk self-attention: causal over this call's tokens with pad
+    # keys dropped — the mask the pre-kernel path materialized densely,
+    # rebuilt here from iota against the start/length scalars.
+    @pl.when(i == t_read)
+    def _chunk():
+        q = q_ref[...].astype(jnp.float32) * sm_scale
+        k = kn_ref[...]
+        s = q @ k.astype(jnp.float32).T  # (rows, S)
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // rep
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+        real = (kpos < prefix) | (kpos >= prefix + pad)
+        s = jnp.where((kpos <= qpos) & real, s, NEG_INF)
+        online_update(s, vn_ref[...])
+
+    # Scatter phase: merge one destination block.  Offset o holds cache
+    # position w*bs + o = start + j; compacted index j maps back to padded
+    # source row j (vlm prefix) or j + pad (prompt tokens).  The one-hot
+    # matmul places each valid destination row exactly (0/1 coefficients
+    # in fp32 — bit-exact with the host-side scatter after the cast).
+    @pl.when(i >= t_read)
+    def _scatter():
+        w = jnp.minimum(start // bs + (i - t_read), T - 1)
+        o = jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0)
+        j = w * bs + o - start
+        valid = (j >= 0) & (j < prefix + length)
+        src = jnp.where(j < prefix, j, j + pad)
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+        oh = ((col == src) & valid).astype(jnp.float32)  # (bs, S)
+        kvd = ko_ref.dtype
+        new_k = (oh @ kn_ref[...].astype(jnp.float32)).astype(kvd)
+        new_v = (oh @ vn_ref[...].astype(jnp.float32)).astype(kvd)
+        ko_ref[...] = jnp.where(valid, new_k, kp_ref[...])
+        vo_ref[...] = jnp.where(valid, new_v, vp_ref[...])
+
+    @pl.when(i == n_i - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("prefix", "has_ctx", "interpret"))
+def paged_flash_prefill(q, k_new, v_new, k_pool, v_pool, lengths,
+                        block_tables, start, *, prefix: int = 0,
+                        has_ctx: bool = True, interpret: bool = False):
+    """Chunked-prefill attention + fused K/V scatter on the paged pool.
+
+    q:             (B, S, H, D) rotated chunk queries (S = prefix + P,
+                   prompt tokens LEFT-padded to P);
+    k_new/v_new:   (B, S, Hk, D) the chunk's rotated K/V (compute dtype);
+    k_pool/v_pool: (N, bs, Hk, D) the SHARED block pool
+                   (``model.init_paged_cache`` layout, trash block
+                   included) — updated in place via
+                   ``input_output_aliases``;
+    lengths:       (B,) int32 true chunk token count per row (<= P);
+    block_tables:  (B, T) int32 per-lane tables (unallocated entries point
+                   at the trash block);
+    start:         (B,) int32 cache positions already filled per row;
+    prefix:        static vlm patch-prefix length (first chunk only);
+    has_ctx:       static — False for first chunks (start == 0 rows): the
+                   table-walk read phase is dropped from the grid.
+
+    Returns (attn_out (B, S, H*D), k_pool', v_pool').  Cached KV bytes are
+    read exactly once per chunk, block by block through the table — never
+    gathered into a per-lane dense copy — and the new K/V lands in the
+    pool inside the same kernel invocation.
+    """
+    B, S, H, D = q.shape
+    Hk = k_new.shape[2]
+    rep = H // Hk
+    bs = k_pool.shape[1]
+    T = block_tables.shape[1]
+    sm_scale = 1.0 / math.sqrt(D)
+
+    qt = q.reshape(B, S, Hk, rep, D).transpose(0, 2, 1, 3, 4) \
+        .reshape(B, Hk, S * rep, D)
+    knt = k_new.transpose(0, 2, 1, 3)  # (B, Hk, S, D)
+    vnt = v_new.transpose(0, 2, 1, 3)
+
+    # Writes span <= ceil(S/bs)+1 blocks (the +1 absorbs a start%bs
+    # straddle); steps clamped past the table end re-merge idempotently.
+    t_read = T if has_ctx else 0
+    w_steps = min(T, -(-S // bs) + 1)
+    grid = (B, Hk, t_read + w_steps)
+
+    def pool_read_blk(b, h, i, lens, starts, tbl):
+        wr = jnp.minimum(starts[b] // bs + (i - t_read), T - 1)
+        idx = jnp.where(i < t_read, jnp.minimum(i, T - 1), wr)
+        return (tbl[b, idx], 0, h, 0)
+
+    def pool_write_blk(b, h, i, lens, starts, tbl):
+        # Parked on the FIRST write block during the read phase so the
+        # (unwritten) output buffer is never flushed over a context block.
+        j = jnp.maximum(i - t_read, 0)
+        return (tbl[b, jnp.minimum(starts[b] // bs + j, T - 1)], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # lengths, start, block_tables
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, S * rep, D),
+                         lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S, D),
+                         lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S, D),
+                         lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((None, bs, None, D), pool_read_blk),
+            pl.BlockSpec((None, bs, None, D), pool_read_blk),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, S * rep, D),
+                         lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((None, bs, None, D), pool_write_blk),
+            pl.BlockSpec((None, bs, None, D), pool_write_blk),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((S * rep, D), jnp.float32),  # acc
+            pltpu.VMEM((S * rep, 1), jnp.float32),  # running max
+            pltpu.VMEM((S * rep, 1), jnp.float32),  # running denom
+        ],
+    )
+    out, k_pool, v_pool = pl.pallas_call(
+        functools.partial(_prefill_kernel, bs=bs, prefix=prefix,
+                          t_read=t_read, sm_scale=sm_scale),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hk, S * rep, D), q.dtype),
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+        ],
+        # Flat input indices (scalar-prefetch leaves included): pools are
+        # inputs 6/7 -> outputs 1/2, so the update happens in place.
+        input_output_aliases={6: 1, 7: 2},
+        interpret=interpret,
+    )(jnp.asarray(lengths, jnp.int32), jnp.asarray(start, jnp.int32),
+      jnp.asarray(block_tables, jnp.int32), qt, knt, vnt, k_pool, v_pool)
+    out = out.reshape(B, Hk, S, rep, D).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, S, H * D), k_pool, v_pool

@@ -1,0 +1,67 @@
+"""Public chunked-prefill attention entry point: one call, both paths.
+
+``prefill_attention`` is what ``models.model.prefill_slots`` (and therefore
+the serving engine's jitted prefill chunks) dispatches through.  The
+implementation is selected by the ``attn_kernel`` knob — the generalization
+of PR 4's ``decode_kernel`` to BOTH attention hot paths:
+
+  * ``"auto"`` (default) — the Pallas kernel on TPU, the jnp reference
+    elsewhere (probe: ``jax.default_backend()``, same as flash_decode);
+  * ``"on"``   — always the kernel; off-TPU it runs in Pallas interpret
+    mode (the CI/CPU parity path — bit-for-bit the kernel's math, executed
+    by the interpreter);
+  * ``"off"``  — always the jnp reference: the pre-kernel dense context
+    gather + host-side K/V scatter.
+
+The knob threads down from ``ModelConfig.attn_kernel`` /
+``ServingEngine(attn_kernel=...)`` / ``launch.serve --attn-kernel``.
+Deprecated spellings: ``ServingEngine(decode_kernel=...)`` and
+``--decode-kernel`` map onto ``attn_kernel`` with a DeprecationWarning,
+and ``cfg.decode_kernel`` remains readable as a property.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+# Same probe + mode set as the decode-side kernel: "attn_kernel" selects
+# both, so resolve_kernel is single-sourced there.
+from repro.kernels.flash_decode.ops import (DECODE_KERNEL_MODES,
+                                            resolve_kernel)
+from repro.kernels.flash_prefill.flash_prefill import paged_flash_prefill
+from repro.kernels.flash_prefill.ref import prefill_attention_ref
+
+ATTN_KERNEL_MODES = DECODE_KERNEL_MODES  # ("auto", "on", "off")
+
+
+def prefill_attention(q, k_new, v_new, k_pool, v_pool, lengths,
+                      block_tables, *, start: Optional[jnp.ndarray] = None,
+                      prefix: int = 0, kernel: str = "auto"):
+    """One layer of paged chunked-prefill attention + new-token K/V scatter.
+
+    q: (B, S, H, D) rotated chunk queries (S = prefix + P, prompt tokens
+    LEFT-padded to P); k_new/v_new: (B, S, Hk, D) the chunk's rotated K/V;
+    k_pool/v_pool: (N, bs, Hk, D) shared block pool; lengths: (B,) int32
+    true chunk token counts; block_tables: (B, T) int32; start: None for
+    first chunks, else (B,) int32 cached positions per row; prefix: static
+    vlm patch-prefix length (first chunk only).
+
+    Returns (attn_out (B, S, H*D), k_pool', v_pool').  On the kernel path
+    the cached context is streamed through the block table (no dense
+    per-lane gather, no dense (B, S, S) mask) and the scatter happens
+    inside the kernel; the reference path gathers and scatters host-side,
+    bit-exact with the pre-kernel engine.
+    """
+    use_kernel, interpret = resolve_kernel(kernel)
+    if not use_kernel:
+        return prefill_attention_ref(q, k_new, v_new, k_pool, v_pool,
+                                     lengths, block_tables, start=start,
+                                     prefix=prefix)
+    B = q.shape[0]
+    start_v = jnp.zeros((B,), jnp.int32) if start is None \
+        else jnp.asarray(start, jnp.int32)
+    return paged_flash_prefill(q, k_new, v_new, k_pool, v_pool, lengths,
+                               block_tables, start_v, prefix=prefix,
+                               has_ctx=start is not None,
+                               interpret=interpret)

@@ -6,6 +6,7 @@
 from __future__ import annotations
 
 import argparse
+import warnings
 
 import jax
 import numpy as np
@@ -14,6 +15,22 @@ from repro.configs.base import get_config, list_archs
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
 from repro.serving.sampler import SamplerConfig
+
+
+def resolve_attn_kernel_arg(attn_kernel, decode_kernel) -> str:
+    """Fold the deprecated ``--decode-kernel`` spelling into
+    ``--attn-kernel`` (with a DeprecationWarning), defaulting to "auto"."""
+    if decode_kernel is not None:
+        warnings.warn(
+            "--decode-kernel is deprecated; the knob now selects the "
+            "prefill kernel too — use --attn-kernel",
+            DeprecationWarning, stacklevel=2)
+        if attn_kernel is not None and attn_kernel != decode_kernel:
+            raise SystemExit(
+                f"conflicting --attn-kernel {attn_kernel} and "
+                f"--decode-kernel {decode_kernel}")
+        return decode_kernel
+    return attn_kernel or "auto"
 
 
 def main():
@@ -48,14 +65,20 @@ def main():
                     help="decode iterations per jitted step / host sync "
                          "(masked early-exit on retirement; >1 amortizes "
                          "dispatch latency over several tokens)")
-    ap.add_argument("--decode-kernel", default="auto",
+    ap.add_argument("--attn-kernel", default=None,
                     choices=["auto", "on", "off"],
-                    help="decode-attention implementation: the Pallas "
-                         "flash-decode kernel (paged: walks the block "
-                         "table straight out of the shared KV pool) on "
-                         "TPU with 'auto', forced everywhere with 'on' "
-                         "(interpret mode off-TPU), or the jnp reference "
-                         "with 'off'")
+                    help="attention-kernel implementation for BOTH paged "
+                         "hot paths (flash-decode and flash-prefill — "
+                         "each walks the block table straight out of the "
+                         "shared KV pool; the prefill kernel also fuses "
+                         "the new-token K/V scatter): Pallas kernels on "
+                         "TPU with 'auto' (default), forced everywhere "
+                         "with 'on' (interpret mode off-TPU), or the jnp "
+                         "references with 'off'")
+    ap.add_argument("--decode-kernel", default=None,
+                    choices=["auto", "on", "off"],
+                    help="DEPRECATED alias of --attn-kernel (the knob now "
+                         "selects the prefill kernel too)")
     ap.add_argument("--preempt-policy", default="youngest",
                     choices=["youngest", "largest", "deadline"],
                     help="which in-flight request pool pressure preempts: "
@@ -77,7 +100,9 @@ def main():
         block_size=args.block_size, num_blocks=args.num_blocks,
         prefill_chunk=args.prefill_chunk or None,
         prefix_cache=args.prefix_cache, decode_steps=args.decode_steps,
-        decode_kernel=args.decode_kernel, preempt_policy=args.preempt_policy,
+        attn_kernel=resolve_attn_kernel_arg(args.attn_kernel,
+                                            args.decode_kernel),
+        preempt_policy=args.preempt_policy,
         sampler=SamplerConfig(temperature=args.temperature, top_k=50))
 
     rng = np.random.default_rng(args.seed)
@@ -105,7 +130,9 @@ def main():
              f", KV utilization {s.block_utilization:.0%}, "
              f"{s.preemptions} preemptions") \
         if engine.mode == "continuous" else ("", "")
-    print(f"prefill {s.prefill_tokens} tok in {s.prefill_s:.2f}s{paged[0]}; "
+    print(f"prefill {s.prefill_tokens} tok in {s.prefill_s:.2f}s "
+          f"({s.prefill_tokens_per_s:.1f} tok/s, mean TTFT "
+          f"{s.mean_ttft_s * 1e3:.1f}ms){paged[0]}; "
           f"generated {s.generated_tokens} tok in {s.decode_s:.2f}s "
           f"({s.tokens_per_s:.1f} tok/s, mode={engine.mode}, "
           f"lane occupancy {s.slot_occupancy:.0%}{paged[1]})")

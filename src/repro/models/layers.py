@@ -275,7 +275,7 @@ def attention_decode(
     The new K/V is scattered into each row's own cache index, then the
     attention READ dispatches through the single
     ``kernels.flash_decode.ops.decode_attention`` entry point (per-row
-    lengths = position + 1), selected by ``cfg.decode_kernel``: the Pallas
+    lengths = position + 1), selected by ``cfg.attn_kernel``: the Pallas
     flash-decode kernel on TPU (interpret mode when forced on elsewhere) or
     the jnp reference.
 
@@ -313,7 +313,7 @@ def attention_decode(
         v_cache = v_cache.at[rows, pos].set(v[:, 0].astype(v_cache.dtype))
         out = decode_ops.decode_attention(
             q[:, 0], k_cache.astype(x.dtype), v_cache.astype(x.dtype),
-            lengths, kernel=cfg.decode_kernel)
+            lengths, kernel=cfg.attn_kernel)
     else:
         bs = k_cache.shape[1]
         rows = jnp.arange(B)
@@ -326,7 +326,7 @@ def attention_decode(
         v_cache = v_cache.at[blk, pos % bs].set(v[:, 0].astype(v_cache.dtype))
         out = decode_ops.decode_attention(
             q[:, 0], k_cache, v_cache, lengths, block_tables=block_tables,
-            kernel=cfg.decode_kernel)
+            kernel=cfg.attn_kernel)
     return out.reshape(B, 1, -1).astype(x.dtype) @ p["wo"], k_cache, v_cache
 
 

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.flash_prefill import ops as prefill_ops
 from repro.models import layers, moe as moe_lib, ssm as ssm_lib
 from repro.models.layers import DTYPE, embed_init
 from repro.parallel import sharding
@@ -177,55 +178,25 @@ def _scan_blocks(body, h, blocks, remat: bool):
     return h, aux
 
 
-def _attn_block_body(cfg: ModelConfig, blk: Params, x: jnp.ndarray,
-                     positions: jnp.ndarray,
-                     mask: Optional[jnp.ndarray] = None,
-                     moe_valid: Optional[jnp.ndarray] = None,
-                     ctx_kv=None):
-    """ONE per-layer block body for the attention families (dense/moe/vlm).
-
-    ``backbone`` (train/full forward), ``prefill`` (wave cache build) and
-    ``prefill_slots`` (paged chunked admission) all run this body — they
-    differ only in the (positions, mask) they pass and in what they do with
-    the returned K/V, so the greedy bit-identity contract pinned by
-    tests/test_continuous_batching.py holds across all three by
-    construction.
-
-    positions: (S,) or (B, S) rope positions.
-    mask: None => plain causal over this call's tokens (long sequences take
-      the blockwise flash path); else (B, Sq, Skv) bool over THIS call's
-      keys (left-pad masking).
-    moe_valid: (B, S) bool routing-validity mask (pads/dead lanes consume
-      no expert capacity); only meaningful for the moe family.
-    ctx_kv: optional (ctx_k, ctx_v, ctx_mask) of ALREADY-CACHED context —
-      ctx_k/ctx_v (B, Skv_ctx, Hk, D) gathered from a paged KV cache,
-      ctx_mask (B, Skv_ctx) bool — prepended to the key sequence so a
-      prefill chunk attends to the prompt tokens cached by earlier chunks.
-
-    Returns (x_out, k, v, aux) with k/v of this call's tokens (compute
-    dtype — callers cast to the cache storage dtype).
-    """
+def _attn_qkv(cfg: ModelConfig, blk: Params, x: jnp.ndarray,
+              positions: jnp.ndarray):
+    """Shared attention-input stage: norm, QKV projection, RoPE, sharding
+    anchor.  positions: (S,) or (B, S) rope positions.  Returns (q, k, v)
+    in compute dtype — ONE definition, so every caller's K/V matches the
+    cache contents bit-for-bit."""
     xn = layers.apply_norm(cfg, blk["ln_attn"], x)
     q, k, v = layers._project_qkv(cfg, blk["attn"], xn, xn)
     q = layers.apply_rope(cfg, q, positions)
     k = layers.apply_rope(cfg, k, positions)
-    q = sharding.constrain_heads(q)
-    B, S = x.shape[0], x.shape[1]
-    if mask is None and ctx_kv is None \
-            and S >= layers.CHUNKED_ATTN_THRESHOLD and S % layers.Q_CHUNK == 0:
-        a = layers.chunked_attention(q, k, v, causal=True)
-    else:
-        if mask is None:
-            mask = jnp.tril(jnp.ones((S, S), bool))[None]
-        kk, vv = k, v
-        if ctx_kv is not None:
-            ck, cv, cmask = ctx_kv
-            kk = jnp.concatenate([ck.astype(x.dtype), k], axis=1)
-            vv = jnp.concatenate([cv.astype(x.dtype), v], axis=1)
-            mask = jnp.concatenate(
-                [jnp.broadcast_to(cmask[:, None, :], (B, S, ck.shape[1])),
-                 jnp.broadcast_to(mask, (B, S, S))], axis=-1)
-        a = layers._sdpa(cfg, q, kk, vv, mask[:, None, None])
+    return sharding.constrain_heads(q), k, v
+
+
+def _attn_post(cfg: ModelConfig, blk: Params, x: jnp.ndarray,
+               a: jnp.ndarray, moe_valid: Optional[jnp.ndarray] = None):
+    """Shared attention-output stage: residual + output projection, then
+    the MLP/MoE half.  moe_valid: (B, S) bool routing-validity mask
+    (pads/dead lanes consume no expert capacity; moe family only).
+    Returns (x_out, aux)."""
     x = x + a @ blk["attn"]["wo"]
     if "moe" in blk:
         y, aux = moe_lib.apply_moe(
@@ -235,7 +206,34 @@ def _attn_block_body(cfg: ModelConfig, blk: Params, x: jnp.ndarray,
         y = layers.apply_mlp(cfg, blk["mlp"],
                              layers.apply_norm(cfg, blk["ln_mlp"], x))
         aux = 0.0
-    return x + y, k, v, aux
+    return x + y, aux
+
+
+def _attn_block_body(cfg: ModelConfig, blk: Params, x: jnp.ndarray,
+                     positions: jnp.ndarray):
+    """ONE per-layer block body for the attention families (dense/moe/vlm)
+    over a plain causal window.
+
+    ``backbone`` (train/full forward) and ``prefill`` (wave cache build)
+    run this body; ``prefill_slots`` (paged chunked admission) shares its
+    ``_attn_qkv``/``_attn_post`` stages but routes the attention core
+    through ``kernels.flash_prefill.ops.prefill_attention`` (cached-context
+    table walk + left-pad masking + fused K/V scatter), so the greedy
+    bit-identity contract pinned by tests/test_continuous_batching.py holds
+    across all three by construction.
+
+    Returns (x_out, k, v, aux) with k/v of this call's tokens (compute
+    dtype — callers cast to the cache storage dtype).
+    """
+    q, k, v = _attn_qkv(cfg, blk, x, positions)
+    S = x.shape[1]
+    if S >= layers.CHUNKED_ATTN_THRESHOLD and S % layers.Q_CHUNK == 0:
+        a = layers.chunked_attention(q, k, v, causal=True)
+    else:
+        mask = jnp.tril(jnp.ones((S, S), bool))[None]
+        a = layers._sdpa(cfg, q, k, v, mask[:, None, None])
+    x, aux = _attn_post(cfg, blk, x, a)
+    return x, k, v, aux
 
 
 def backbone(cfg: ModelConfig, params: Params, h: jnp.ndarray,
@@ -495,16 +493,25 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
     chunks across several calls (interleaved with decode iterations by the
     engine, so admission never stalls in-flight decodes): the first call
     passes ``start=None``, later calls pass each row's already-cached token
-    count and the chunk attends to the cached context through a block-table
-    gather.
+    count and the chunk attends to the cached context through its block
+    table.
 
     Prefix caching rides the same ``start`` mechanism: a request admitted
     with ``cached_len`` prefix tokens already resident (shared blocks
     matched by ``serving.paged.BlockStore``) enters here as a continuation
     with ``start = cached_len`` — only the uncached tail is embedded and
     written, while the shared context (including a cached vlm patch prefix)
-    is gathered read-only through the block table.  The writes land
-    strictly at positions >= ``start``, i.e. past every shared block.
+    is read through the block table.  The writes land strictly at
+    positions >= ``start``, i.e. past every shared block.
+
+    Per layer, the attention core AND the new-token K/V scatter dispatch
+    through ``kernels.flash_prefill.ops.prefill_attention``, selected by
+    ``cfg.attn_kernel``: on the kernel path the cached context is streamed
+    block-by-block straight out of the shared pool (scalar-prefetched
+    table walk — no dense per-lane ``k_pool[block_tables]`` copy, no dense
+    (Bn, S, S) mask) and the compacted chunk K/V is scattered into the
+    pool inside the same kernel invocation; the reference path gathers and
+    scatters host-side, bit-exact with the pre-kernel engine.
 
     tokens:  (Bn, P) int32, each row's chunk LEFT-padded to P;
     lengths: (Bn,) true token count of this chunk (<= P);
@@ -522,10 +529,10 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
     requests share expert-capacity buffers, so under *tight* capacity
     factors drops — and therefore logits — can differ from the solo run)
     and pad RoPE phases are clipped to each row's first real position.
-    After the layer scan each row's K/V is rolled left-compact
-    ([patches | chunk | junk]) and scattered through its block table at
-    positions ``start + i``; junk-tail writes are dropped, so nothing lands
-    outside the row's own blocks.
+    Per layer each row's K/V is left-compacted ([patches | chunk | junk])
+    and scattered through its block table at positions ``start + i``;
+    junk-tail writes are dropped, so nothing lands outside the row's own
+    blocks.
 
     Families: dense / moe / vlm (attention KV caches).  MoE blocks receive
     the real-token mask as routing validity, so pad tokens consume no
@@ -562,56 +569,27 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
     else:
         positions = tok_pos  # (Bn, S)
 
-    # Key j is visible to query i iff causal AND j is not a pad slot.
+    # Real-token mask for MoE routing validity: pads/dead slots consume
+    # no expert capacity.  (The attention-side causal/left-pad masking now
+    # lives in kernels.flash_prefill, derived from the same scalars — on
+    # the kernel path no dense (Bn, S, S) mask is ever materialized.)
     sidx = jnp.arange(S)
     real_key = (sidx[None] < prefix) | (sidx[None] >= prefix + pad[:, None])
-    mask = (sidx[None, None, :] <= sidx[None, :, None]) \
-        & real_key[:, None, :]  # (Bn, S, S)
-    kvd = kv_store_dtype(cfg)
-    bs = cache["k"].shape[2]
-    if not first:
-        # Cached-context visibility: position j of the gathered blocks is
-        # live iff j < start (blocks flatten back to position order).
-        ctx_len = block_tables.shape[1] * bs
-        ctx_mask = jnp.arange(ctx_len)[None] < start_v[:, None]  # (Bn, Tbs)
+    lengths = jnp.asarray(lengths, jnp.int32)
 
     def body(x, blk_kv):
         blk, kc, vc = blk_kv
-        ctx_kv = None
-        if not first:
-            kg = kc[block_tables].reshape(Bn, -1, *kc.shape[2:])
-            vg = vc[block_tables].reshape(Bn, -1, *vc.shape[2:])
-            ctx_kv = (kg, vg, ctx_mask)
-        x, k, v, _ = _attn_block_body(cfg, blk, x, positions, mask=mask,
-                                      moe_valid=real_key, ctx_kv=ctx_kv)
-        return x, (k.astype(kvd), v.astype(kvd))
+        q, k, v = _attn_qkv(cfg, blk, x, positions)
+        a, kc, vc = prefill_ops.prefill_attention(
+            q, k, v, kc, vc, lengths, block_tables,
+            start=None if first else start_v, prefix=prefix,
+            kernel=cfg.attn_kernel)
+        x, _ = _attn_post(cfg, blk, x, a, moe_valid=real_key)
+        return x, (kc, vc)
 
     h, (ks, vs) = jax.lax.scan(
         body, h, (params["blocks"], cache["k"], cache["v"]))
-
-    # Left-compact each row's token K/V: real tokens to offsets 0..len-1
-    # after the prefix, then scatter through the block table at positions
-    # start + i.  Junk-tail entries are redirected out of bounds and
-    # dropped so they cannot touch another row's blocks.
-    roll_idx = (jnp.arange(P)[None] + pad[:, None]) % P  # (Bn, P)
-
-    def compact(kv):  # (L, Bn, S, hk, hd), token part rolled left
-        head, tail = kv[:, :, :prefix], kv[:, :, prefix:]
-        tail = jnp.take_along_axis(
-            tail, roll_idx[None, :, :, None, None], axis=2)
-        return jnp.concatenate([head, tail], axis=2) if prefix else tail
-
-    N = cache["k"].shape[1]
-    T = block_tables.shape[1]
-    dest = start_v[:, None] + jnp.arange(S)[None]  # (Bn, S) cache positions
-    blk_idx = jnp.minimum(dest // bs, T - 1)
-    blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)  # (Bn, S)
-    writable = jnp.arange(S)[None] < prefix + lengths[:, None]
-    blk = jnp.where(writable, blk, N)  # junk -> out of bounds -> dropped
-    off = dest % bs
-    cache = dict(cache,
-                 k=cache["k"].at[:, blk, off].set(compact(ks), mode="drop"),
-                 v=cache["v"].at[:, blk, off].set(compact(vs), mode="drop"))
+    cache = dict(cache, k=ks, v=vs)
     # Left padding aligns every row's last REAL token at index S-1.
     logits = unembed(cfg, params, h[:, -1])
     return logits, cache
@@ -638,7 +616,7 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
     a dense (L, B, ctx) stripe (dense/moe/vlm only).  Per layer, attention
     reads dispatch through ``kernels.flash_decode.ops.decode_attention``
     with the (pool, block_tables, lengths = position + 1) calling
-    convention: on the kernel path (``cfg.decode_kernel``) each row's
+    convention: on the kernel path (``cfg.attn_kernel``) each row's
     blocks are walked through the table straight out of the shared pool —
     no dense per-lane copy of the pool is materialized.
 

@@ -42,14 +42,20 @@ worst-case reservation:
     decode iterations per host sync (``lax.scan`` with masked early-exit on
     EOS/budget retirement), amortizing dispatch + device->host latency over
     k tokens.  Defaults to 1 (bit-identical to the single-step engine);
-  * **fused paged decode attention**: the jitted decode step's attention
-    reads go through ``kernels.flash_decode.ops.decode_attention`` — on
-    TPU the Pallas flash-decode kernel walks each lane's blocks through
-    its table straight out of the shared pool (KV bytes streamed exactly
-    once per token, the CC-MEM contract), instead of first gathering a
-    dense O(B*T*bs*Hk*D) per-lane copy of the pool.  ``decode_kernel``
-    selects the implementation ("auto"/"on"/"off"; "on" uses Pallas
-    interpret mode off-TPU — the CI parity path).
+  * **fused paged attention, decode AND prefill**: the jitted decode
+    step's attention reads go through
+    ``kernels.flash_decode.ops.decode_attention`` and every prefill
+    chunk's through ``kernels.flash_prefill.ops.prefill_attention`` — on
+    TPU the Pallas kernels walk each lane's blocks through its table
+    straight out of the shared pool (KV bytes streamed exactly once, the
+    CC-MEM contract), instead of first gathering a dense O(B*T*bs*Hk*D)
+    per-lane copy of the pool; the prefill kernel additionally derives
+    the causal/left-pad mask from scalars (no dense (B, S, S) mask) and
+    scatters the chunk's new K/V into the pool INSIDE the same kernel
+    invocation (``input_output_aliases`` — no separate HBM round-trip).
+    ``attn_kernel`` selects the implementation for both paths
+    ("auto"/"on"/"off"; "on" uses Pallas interpret mode off-TPU — the CI
+    parity path); ``decode_kernel=`` is accepted as a deprecated alias.
 
 Correctness contract (pinned by tests/test_continuous_batching.py): greedy
 outputs are bit-identical with prefix caching on or off, across concurrent
@@ -67,9 +73,11 @@ Knobs (see also examples/quickstart.py):
   * ``prefix_cache`` — block sharing on/off (off: every block exclusive,
     released blocks return straight to the free list).
   * ``decode_steps`` — decode iterations per jitted step / host sync.
-  * ``decode_kernel`` — decode-attention implementation ("auto" = kernel
-    on TPU / reference elsewhere; "on" forces the kernel, interpret mode
-    off-TPU; "off" forces the jnp reference).
+  * ``attn_kernel`` — attention-kernel implementation for the paged
+    decode AND chunked-prefill hot paths ("auto" = kernels on TPU /
+    references elsewhere; "on" forces the kernels, interpret mode
+    off-TPU; "off" forces the jnp references — the pre-kernel gather
+    paths).  ``decode_kernel`` is the deprecated PR-4 spelling.
   * ``preempt_policy`` — pool-pressure victim selection: "youngest"
     (default), "largest" (most blocks held) or "deadline" (latest
     ``submit(deadline=...)`` evicted first).
@@ -96,6 +104,7 @@ from __future__ import annotations
 import functools
 import hashlib
 import time
+import warnings
 from dataclasses import dataclass, field, replace as dc_replace
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -104,7 +113,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.kernels.flash_decode.ops import DECODE_KERNEL_MODES
+from repro.kernels.flash_prefill.ops import ATTN_KERNEL_MODES
 from repro.models import model as M
 from repro.parallel import sharding
 from repro.serving.paged import (BlockStore, CHAIN_ROOT, OutOfBlocks,
@@ -170,6 +179,12 @@ class EngineStats:
     decode_steps: int = 0
     admissions: int = 0
     preemptions: int = 0
+    # Time-to-first-token (submit -> first generated token observed at a
+    # host sync), summed over finished-first-token requests.  The paged
+    # flash-prefill work prices exactly this: TTFT is the prefill-side
+    # latency metric the decode-side tokens_per_s cannot see.
+    ttft_s_sum: float = 0.0
+    ttft_count: int = 0
     # Peak PHYSICAL pool occupancy: blocks referenced by >= 1 lane at the
     # worst moment (retired-but-resident LRU blocks do NOT count — they
     # are reclaimable).  This is the number CC-MEM capacity planning
@@ -189,6 +204,18 @@ class EngineStats:
     @property
     def tokens_per_s(self) -> float:
         return self.generated_tokens / max(self.decode_s, 1e-9)
+
+    @property
+    def prefill_tokens_per_s(self) -> float:
+        """Prompt tokens prefilled per second of prefill wall time (cached
+        prefix tokens are skipped work — they do not count)."""
+        return self.prefill_tokens / max(self.prefill_s, 1e-9)
+
+    @property
+    def mean_ttft_s(self) -> float:
+        """Mean submit->first-token latency over requests that produced at
+        least one token."""
+        return self.ttft_s_sum / max(self.ttft_count, 1)
 
     @property
     def slot_occupancy(self) -> float:
@@ -239,6 +266,7 @@ class ServingEngine:
                  prefill_chunk: Optional[int] = 32,
                  prefix_cache: bool = True,
                  decode_steps: int = 1,
+                 attn_kernel: Optional[str] = None,
                  decode_kernel: Optional[str] = None,
                  preempt_policy: str = "youngest"):
         """mode: "auto" (continuous where the family supports it),
@@ -249,10 +277,13 @@ class ServingEngine:
         decode_steps: paged-KV and scheduler knobs, see the module
         docstring.
 
-        decode_kernel: overrides ``cfg.decode_kernel`` — "auto" (Pallas
-        flash-decode kernel on TPU, jnp reference elsewhere), "on" (always
-        the kernel; interpret mode off-TPU) or "off" (always the
-        reference).  None keeps the config's setting.
+        attn_kernel: overrides ``cfg.attn_kernel`` — the implementation of
+        BOTH paged attention hot paths (flash-decode and flash-prefill):
+        "auto" (Pallas kernels on TPU, jnp references elsewhere), "on"
+        (always the kernels; interpret mode off-TPU) or "off" (always the
+        references).  None keeps the config's setting.  ``decode_kernel=``
+        is the deprecated PR-4 spelling and maps onto ``attn_kernel`` with
+        a DeprecationWarning.
 
         preempt_policy: which in-flight request pool pressure evicts —
         "youngest" (highest uid; the default, matches prior behavior),
@@ -267,11 +298,21 @@ class ServingEngine:
                 f"preempt_policy {preempt_policy!r} not in "
                 f"{PREEMPT_POLICIES}")
         if decode_kernel is not None:
-            if decode_kernel not in DECODE_KERNEL_MODES:
+            warnings.warn(
+                "ServingEngine(decode_kernel=...) is deprecated; the knob "
+                "now selects the prefill kernel too — use attn_kernel=",
+                DeprecationWarning, stacklevel=2)
+            if attn_kernel is not None and attn_kernel != decode_kernel:
                 raise ValueError(
-                    f"decode_kernel {decode_kernel!r} not in "
-                    f"{DECODE_KERNEL_MODES}")
-            cfg = dc_replace(cfg, decode_kernel=decode_kernel)
+                    f"conflicting attn_kernel={attn_kernel!r} and "
+                    f"decode_kernel={decode_kernel!r}")
+            attn_kernel = decode_kernel
+        if attn_kernel is not None:
+            if attn_kernel not in ATTN_KERNEL_MODES:
+                raise ValueError(
+                    f"attn_kernel (nee decode_kernel) {attn_kernel!r} not "
+                    f"in {ATTN_KERNEL_MODES}")
+            cfg = dc_replace(cfg, attn_kernel=attn_kernel)
         self.preempt_policy = preempt_policy
         self.cfg = cfg
         self.max_batch = max_batch
@@ -282,6 +323,8 @@ class ServingEngine:
         self.stats = EngineStats()
         self._queue: List[Request] = []
         self._instant: List[Tuple[int, List[int]]] = []  # zero-budget retires
+        #: uid -> submit wall time, consumed when its first token lands.
+        self._submit_t: Dict[int, float] = {}
         #: uid -> (content length, chain digests): a queue head waiting
         #: for capacity is re-matched every scheduler step — hash its
         #: prompt once, not once per step.
@@ -376,11 +419,19 @@ class ServingEngine:
                     f"request needs {need} KV blocks but the pool/block "
                     f"table caps at {cap}; it can never be admitted "
                     f"(raise num_blocks or shorten the prompt/budget)")
+        self._submit_t[uid] = time.perf_counter()
         self._queue.append(Request(
             uid, prompt, max_new_tokens, deadline=deadline,
             patch_embeds=patch_embeds,
             chain_seed=self._chain_seed(patch_embeds)))
         return uid
+
+    def _note_first_token(self, uid: int) -> None:
+        """Record submit->first-token latency, once per request."""
+        t0 = self._submit_t.pop(uid, None)
+        if t0 is not None:
+            self.stats.ttft_s_sum += time.perf_counter() - t0
+            self.stats.ttft_count += 1
 
     def _chain_seed(self, patch_embeds: Optional[np.ndarray]) -> bytes:
         """Per-request prefix-cache chain root.  Non-vlm content is fully
@@ -460,6 +511,8 @@ class ServingEngine:
                 if not alive:
                     break
                 r.output.append(int(tok_h[j, i]))
+                if len(r.output) == 1:
+                    self._note_first_token(r.uid)
                 self._host_pos[i] += 1
                 self._host_rem[i] -= 1
                 self.stats.generated_tokens += 1
@@ -976,6 +1029,8 @@ class ServingEngine:
             for i, r in enumerate(wave):
                 if not done[i] and len(r.output) < r.max_new_tokens:
                     r.output.append(int(nt[i]))
+                    if len(r.output) == 1:
+                        self._note_first_token(r.uid)
                     self.stats.generated_tokens += 1
                     if nt[i] == self.eos_id:
                         done[i] = True

@@ -84,12 +84,12 @@ def test_paged_decode_step_has_no_dense_kv_gather(arch):
     cfg, params = _make(arch)
     dense_copy = B * T * bs * cfg.num_kv_heads * cfg.head_dim
     on = _paged_decode_jaxpr(
-        dataclasses.replace(cfg, decode_kernel="on"), params, B, bs, T, N)
+        dataclasses.replace(cfg, attn_kernel="on"), params, B, bs, T, N)
     assert _max_gather_elems(on) < dense_copy, (
         "kernel-path decode step still materializes a dense per-lane KV "
         "copy")
     off = _paged_decode_jaxpr(
-        dataclasses.replace(cfg, decode_kernel="off"), params, B, bs, T, N)
+        dataclasses.replace(cfg, attn_kernel="off"), params, B, bs, T, N)
     assert _max_gather_elems(off) >= dense_copy, (
         "positive control lost: the reference path should gather")
 
@@ -117,7 +117,7 @@ def _run_engine(cfg, params, reqs, **kwargs):
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen2-moe-a2.7b",
                                   "internvl2-26b"])
 def test_engine_kernel_on_scheduling_invariance(arch):
-    """decode_kernel="on" (interpret mode on CPU): greedy outputs are
+    """attn_kernel="on" (interpret mode on CPU): greedy outputs are
     bit-identical across prefix cache on/off, chunked vs whole-prompt
     prefill, and decode_steps 1 vs 2, on shared-prefix traffic."""
     cfg, params = _make(arch)
@@ -126,7 +126,7 @@ def test_engine_kernel_on_scheduling_invariance(arch):
     reqs = [(np.concatenate([shared,
                              rng.integers(1, cfg.vocab_size, size=n)]), m)
             for n, m in ((3, 4), (5, 3), (2, 4))]
-    kw = dict(max_batch=2, block_size=4, decode_kernel="on")
+    kw = dict(max_batch=2, block_size=4, attn_kernel="on")
     eng, base = _run_engine(cfg, params, reqs, prefill_chunk=8,
                             prefix_cache=True, **kw)
     assert eng.stats.cached_prompt_tokens > 0  # sharing really happened
@@ -147,7 +147,7 @@ def test_engine_kernel_on_preemption_bit_identical(tiny):
     cfg, params = tiny
     rng = np.random.default_rng(37)
     reqs = [(rng.integers(1, cfg.vocab_size, size=5), 12) for _ in range(3)]
-    kw = dict(max_batch=3, block_size=4, decode_kernel="on")
+    kw = dict(max_batch=3, block_size=4, attn_kernel="on")
     _, ref = _run_engine(cfg, params, reqs, num_blocks=24, **kw)
     eng, out = _run_engine(cfg, params, reqs, num_blocks=9, **kw)
     assert eng.stats.preemptions >= 1
@@ -228,7 +228,11 @@ def test_preempt_policy_validated(tiny):
     cfg, params = tiny
     with pytest.raises(ValueError, match="preempt_policy"):
         ServingEngine(cfg, params, preempt_policy="oldest")
-    with pytest.raises(ValueError, match="decode_kernel"):
+    with pytest.raises(ValueError, match="attn_kernel"):
+        ServingEngine(cfg, params, attn_kernel="maybe")
+    # The deprecated spelling still validates (through the shim).
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(ValueError, match="decode_kernel"):
         ServingEngine(cfg, params, decode_kernel="maybe")
 
 

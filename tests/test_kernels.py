@@ -14,6 +14,8 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.flash_decode.flash_decode import (flash_decode,
                                                     paged_flash_decode)
 from repro.kernels.flash_decode.ref import decode_ref, paged_decode_ref
+from repro.kernels.flash_prefill.flash_prefill import paged_flash_prefill
+from repro.kernels.flash_prefill.ref import prefill_attention_ref
 from repro.kernels.sclad_matmul.sclad_matmul import (
     block_compress, decompress, sclad_matmul)
 from repro.kernels.sclad_matmul.ref import sclad_matmul_ref
@@ -187,6 +189,128 @@ def test_paged_flash_decode_shared_blocks():
     ref = paged_decode_ref(q, k_pool, v_pool, jnp.asarray(lengths), tables)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged flash prefill (table-walked context + fused K/V scatter)
+# ---------------------------------------------------------------------------
+
+def _build_prefill_case(seed, B, H, Hk, D, bs, T, prefix, P, starts, lengths,
+                        dtype, share_ctx_block=False):
+    """Chunk tensors + a shared pool + per-row tables covering each row's
+    cached context and write span (unique blocks in random pool order)."""
+    S = prefix + P
+    sv = np.zeros(B, np.int64) if starts is None else np.asarray(starts)
+    first_extra = prefix if starts is None else 0
+    need = [-(-(int(sv[b]) + first_extra + int(lengths[b])) // bs)
+            for b in range(B)]
+    N = 1 + sum(need) + 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+    kn = jax.random.normal(ks[1], (B, S, Hk, D)).astype(dtype)
+    vn = jax.random.normal(ks[2], (B, S, Hk, D)).astype(dtype)
+    kp = jax.random.normal(ks[3], (N, bs, Hk, D)).astype(dtype)
+    vp = jax.random.normal(ks[4], (N, bs, Hk, D)).astype(dtype)
+    rng = np.random.default_rng(seed)
+    free = list(rng.permutation(np.arange(1, N)))
+    tables = np.zeros((B, T), np.int32)
+    for b in range(B):
+        for j in range(need[b]):
+            tables[b, j] = free.pop()
+    if share_ctx_block and B >= 2:
+        tables[1, 0] = tables[0, 0]  # read-only shared prefix block
+    st = None if starts is None else jnp.asarray(starts, jnp.int32)
+    return (q, kn, vn, kp, vp, jnp.asarray(lengths, jnp.int32),
+            jnp.asarray(tables), st)
+
+
+def _check_prefill_parity(case, prefix, dtype):
+    q, kn, vn, kp, vp, lengths, tables, st = case
+    B = q.shape[0]
+    ro, rk, rv = prefill_attention_ref(q, kn, vn, kp, vp, lengths, tables,
+                                       start=st, prefix=prefix)
+    sv = jnp.zeros((B,), jnp.int32) if st is None else st
+    ko, kk, kv = paged_flash_prefill(q, kn, vn, kp, vp, lengths, tables, sv,
+                                     prefix=prefix, has_ctx=st is not None,
+                                     interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(ko, np.float32), np.asarray(ro, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+    # The fused scatter is EXACT (one-hot fp32 placement + the same cast
+    # chain as the host path): pools must match the reference bitwise —
+    # including untouched blocks, which the aliasing must leave alone.
+    np.testing.assert_array_equal(np.asarray(kk), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+
+
+@pytest.mark.parametrize("B,H,Hk,D,bs,T", [
+    (3, 8, 2, 64, 8, 4),    # GQA rep=4
+    (2, 4, 4, 32, 4, 6),    # MHA, small blocks
+    (4, 8, 1, 64, 16, 2),   # MQA, bigger blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_prefill_continuation(B, H, Hk, D, bs, T, dtype):
+    """Continuation chunks (the prefix-cache-hit / chunked / preemption-
+    recompute path): uneven starts (mid-block and on-boundary) and uneven
+    left-padded lengths vs the dense gather+scatter oracle."""
+    P = 8
+    rng = np.random.default_rng(3)
+    cap = (T - 1) * bs  # leave room for the chunk's writes in the table
+    starts = [1 + int(rng.integers(0, max(cap - P, 1))) for _ in range(B)]
+    starts[0] = bs  # exactly on a block boundary
+    lengths = [P] + [int(rng.integers(1, P + 1)) for _ in range(B - 1)]
+    case = _build_prefill_case(11, B, H, Hk, D, bs, T, 0, P, starts,
+                               lengths, dtype)
+    _check_prefill_parity(case, 0, dtype)
+
+
+@pytest.mark.parametrize("prefix", [0, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_prefill_first_chunk(prefix, dtype):
+    """First chunks (start=None): no context phase; a vlm patch prefix is
+    written along with the left-compacted prompt tokens."""
+    B, H, Hk, D, bs, T, P = 3, 4, 2, 32, 4, 6, 8
+    lengths = [8, 3, 5]
+    case = _build_prefill_case(13, B, H, Hk, D, bs, T, prefix, P, None,
+                               lengths, dtype)
+    _check_prefill_parity(case, prefix, dtype)
+
+
+def test_paged_flash_prefill_shared_context_block():
+    """Two lanes whose tables name the SAME cached context block (prefix
+    sharing) read it concurrently; neither lane's (exclusive) write span
+    disturbs it."""
+    B, H, Hk, D, bs, T, P = 2, 4, 2, 32, 4, 6, 4
+    case = _build_prefill_case(17, B, H, Hk, D, bs, T, 0, P, [4, 4], [4, 2],
+                               jnp.float32, share_ctx_block=True)
+    _check_prefill_parity(case, 0, jnp.float32)
+
+
+def test_paged_flash_prefill_single_token_continuation():
+    """The smallest continuation (one uncached token — a maximal prefix
+    hit) still walks the whole cached context correctly."""
+    B, H, Hk, D, bs, T, P = 2, 4, 1, 16, 4, 5, 4
+    case = _build_prefill_case(19, B, H, Hk, D, bs, T, 0, P, [13, 7], [1, 1],
+                               jnp.float32)
+    _check_prefill_parity(case, 0, jnp.float32)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("bs", [2, 4, 8, 16])
+@pytest.mark.parametrize("P", [2, 4, 8, 16, 32])
+def test_paged_flash_prefill_chunk_sweep(bs, P):
+    """Heavyweight (bs, chunk) sweep across start offsets — every
+    block-boundary alignment of the write span (nightly tier)."""
+    B, H, Hk, D = 3, 4, 2, 32
+    rng = np.random.default_rng(bs * 100 + P)
+    for trial, start0 in enumerate([1, bs - 1, bs, bs + 1, 2 * bs]):
+        T = -(-(start0 + 2 * bs + P) // bs) + 2
+        starts = [start0] + [1 + int(rng.integers(0, start0 + bs))
+                             for _ in range(B - 1)]
+        lengths = [P] + [int(rng.integers(1, P + 1)) for _ in range(B - 1)]
+        case = _build_prefill_case(23 + trial, B, H, Hk, D, bs, T, 0, P,
+                                   starts, lengths, jnp.float32)
+        _check_prefill_parity(case, 0, jnp.float32)
 
 
 # ---------------------------------------------------------------------------

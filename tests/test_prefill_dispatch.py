@@ -1,0 +1,292 @@
+"""Unified prefill-attention dispatch: the engine's chunked-prefill hot
+path runs the Pallas paged flash-prefill kernel (interpret mode on CPU)
+and the jnp gather+scatter reference interchangeably — and the kernel path
+provably materializes neither the dense per-lane context copy NOR the
+dense (Bn, S, S) causal/pad mask (jaxpr regression, with the reference
+path as positive control).  Also pins the attn_kernel deprecation shim
+(``decode_kernel=`` keyword, ``--decode-kernel`` flag, ``cfg.decode_kernel``
+property) and the TTFT / prefill-throughput EngineStats satellites.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.serve import resolve_attn_kernel_arg
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+
+MAX_LEN = 32
+
+
+def _make(arch, **over):
+    cfg = get_config(arch).reduced()
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return _make("tinyllama-1.1b")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr regression: the chunked-prefill continuation step must not gather a
+# dense per-lane context copy, nor build a dense (Bn, S, S) mask
+# ---------------------------------------------------------------------------
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            yield from _iter_param_eqns(v)
+
+
+def _iter_param_eqns(v):
+    if hasattr(v, "jaxpr"):  # ClosedJaxpr
+        yield from _iter_eqns(v.jaxpr)
+    elif hasattr(v, "eqns"):  # Jaxpr
+        yield from _iter_eqns(v)
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _iter_param_eqns(x)
+
+
+def _max_gather_elems(jaxpr):
+    best = 0
+    for eqn in _iter_eqns(jaxpr):
+        if eqn.primitive.name == "gather":
+            for out in eqn.outvars:
+                best = max(best, int(np.prod(out.aval.shape)))
+    return best
+
+
+def _max_bool_elems(jaxpr, lead):
+    """Largest per-lane boolean array (ndim >= 3 with leading dim ``lead``
+    — the dense attention mask's signature; MoE expert-routing one-hots
+    carry other leading dims and must not trip the check)."""
+    best = 0
+    for eqn in _iter_eqns(jaxpr):
+        for out in eqn.outvars:
+            shape = getattr(out.aval, "shape", ())
+            if getattr(out.aval, "dtype", None) == jnp.bool_ and \
+                    len(shape) >= 3 and shape[0] == lead:
+                best = max(best, int(np.prod(shape)))
+    return best
+
+
+def _prefill_cont_jaxpr(cfg, params, Bn, P, bs, T, N):
+    """Continuation-chunk prefill_slots (start given) as a jaxpr."""
+    cache = jax.eval_shape(lambda: M.init_paged_cache(cfg, N + 1, bs))
+    return jax.make_jaxpr(
+        lambda p, c, t, ln, bt, st: M.prefill_slots(cfg, p, c, t, ln, bt,
+                                                    start=st)
+    )(params, cache,
+      jax.ShapeDtypeStruct((Bn, P), jnp.int32),
+      jax.ShapeDtypeStruct((Bn,), jnp.int32),
+      jax.ShapeDtypeStruct((Bn, T), jnp.int32),
+      jax.ShapeDtypeStruct((Bn,), jnp.int32)).jaxpr
+
+
+# The moe case walks a WIDER table so the context-copy tripwire sits above
+# the (family-inherent, KV-independent) MoE expert-dispatch gathers —
+# those scale with Bn*P*d_model, not with the cached-context size.
+@pytest.mark.parametrize("arch,T", [("tinyllama-1.1b", 8),
+                                    ("qwen2-moe-a2.7b", 64),
+                                    ("internvl2-26b", 8)])
+def test_prefill_slots_kernel_path_no_dense_gather_or_mask(arch, T):
+    """On the kernel path no gather in the whole prefill step reaches the
+    (Bn, T*bs, Hk, D) dense per-lane context copy and no bool reaches the
+    (Bn, S, S) dense mask; on the reference path both do (positive
+    control — the regressions this test pins)."""
+    Bn, P, bs, N = 4, 8, 4, 16
+    cfg, params = _make(arch)
+    S = P  # continuation chunks never carry the vlm patch prefix
+    dense_copy = Bn * T * bs * cfg.num_kv_heads * cfg.head_dim
+    dense_mask = Bn * S * S
+    # Embedding lookups must sit below the gather tripwire for the bound
+    # to bite.
+    assert Bn * P * cfg.d_model < dense_copy
+
+    on = _prefill_cont_jaxpr(
+        dataclasses.replace(cfg, attn_kernel="on"), params, Bn, P, bs, T, N)
+    assert _max_gather_elems(on) < dense_copy, (
+        "kernel-path prefill_slots still materializes a dense per-lane "
+        "context copy")
+    assert _max_bool_elems(on, Bn) < dense_mask, (
+        "kernel-path prefill_slots still materializes a dense (Bn, S, S) "
+        "mask")
+    off = _prefill_cont_jaxpr(
+        dataclasses.replace(cfg, attn_kernel="off"), params, Bn, P, bs, T, N)
+    assert _max_gather_elems(off) >= dense_copy, (
+        "positive control lost: the reference path should gather")
+    assert _max_bool_elems(off, Bn) >= dense_mask, (
+        "positive control lost: the reference path should build the dense "
+        "mask")
+
+
+def test_prefill_slots_kernel_path_first_chunk_no_dense_mask(tiny):
+    """First chunks (start=None) take the kernel too: no dense causal/pad
+    mask is built there either."""
+    Bn, P, bs, T, N = 4, 8, 4, MAX_LEN // 4, 16
+    cfg, params = tiny
+    cache = jax.eval_shape(lambda: M.init_paged_cache(
+        dataclasses.replace(cfg, attn_kernel="on"), N + 1, bs))
+    jaxpr = jax.make_jaxpr(
+        lambda p, c, t, ln, bt: M.prefill_slots(
+            dataclasses.replace(cfg, attn_kernel="on"), p, c, t, ln, bt)
+    )(params, cache,
+      jax.ShapeDtypeStruct((Bn, P), jnp.int32),
+      jax.ShapeDtypeStruct((Bn,), jnp.int32),
+      jax.ShapeDtypeStruct((Bn, T), jnp.int32)).jaxpr
+    assert _max_bool_elems(jaxpr, Bn) < Bn * P * P
+
+
+# ---------------------------------------------------------------------------
+# engine matrix: serving machinery is bit-transparent UNDER the prefill
+# kernel (kernel-vs-reference agreement itself is the tolerance property
+# owned by test_kernels.py — see test_decode_dispatch.py for the rationale)
+# ---------------------------------------------------------------------------
+
+def _run_engine(cfg, params, reqs, **kwargs):
+    eng = ServingEngine(cfg, params, max_len=MAX_LEN, eos_id=-1, **kwargs)
+    uids = [eng.submit(p, max_new_tokens=m) for p, m in reqs]
+    out = eng.run()
+    return eng, [out[u] for u in uids]
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "internvl2-26b"])
+def test_engine_prefill_kernel_chunking_invariance(arch):
+    """attn_kernel="on": greedy outputs are bit-identical across prefill
+    chunk sizes (every chunk boundary shifts which continuation calls the
+    kernel sees) and prefix cache on/off, on shared-prefix traffic."""
+    cfg, params = _make(arch)
+    rng = np.random.default_rng(41)
+    shared = rng.integers(1, cfg.vocab_size, size=9)
+    reqs = [(np.concatenate([shared,
+                             rng.integers(1, cfg.vocab_size, size=n)]), m)
+            for n, m in ((3, 4), (6, 3), (2, 4))]
+    kw = dict(max_batch=2, block_size=4, attn_kernel="on")
+    eng, base = _run_engine(cfg, params, reqs, prefill_chunk=4,
+                            prefix_cache=True, **kw)
+    assert eng.stats.cached_prompt_tokens > 0
+    assert eng.stats.prefill_chunks > len(reqs)  # chunking really happened
+    _, chunk8 = _run_engine(cfg, params, reqs, prefill_chunk=8,
+                            prefix_cache=True, **kw)
+    _, whole = _run_engine(cfg, params, reqs, prefill_chunk=None,
+                           prefix_cache=True, **kw)
+    _, no_prefix = _run_engine(cfg, params, reqs, prefill_chunk=4,
+                               prefix_cache=False, **kw)
+    assert chunk8 == base
+    assert whole == base
+    assert no_prefix == base
+
+
+def test_engine_prefill_kernel_preemption_bit_identical(tiny):
+    """Preemption recompute re-enters prefill as a continuation (usually a
+    prefix hit): under the kernel the over-committed pool reproduces the
+    ample pool's outputs exactly."""
+    cfg, params = tiny
+    rng = np.random.default_rng(43)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=7), 10) for _ in range(3)]
+    kw = dict(max_batch=3, block_size=4, prefill_chunk=4, attn_kernel="on")
+    _, ref = _run_engine(cfg, params, reqs, num_blocks=24, **kw)
+    eng, out = _run_engine(cfg, params, reqs, num_blocks=9, **kw)
+    assert eng.stats.preemptions >= 1
+    assert out == ref
+
+
+def test_engine_prefill_kernel_decode_steps_invariance(tiny):
+    """Multi-step decode windows compose with kernel-path prefill."""
+    cfg, params = tiny
+    rng = np.random.default_rng(47)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=9), 6) for _ in range(3)]
+    kw = dict(max_batch=2, block_size=4, prefill_chunk=4, attn_kernel="on")
+    _, one = _run_engine(cfg, params, reqs, decode_steps=1, **kw)
+    _, multi = _run_engine(cfg, params, reqs, decode_steps=3, **kw)
+    assert multi == one
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim: decode_kernel spellings map onto attn_kernel
+# ---------------------------------------------------------------------------
+
+def test_engine_decode_kernel_kwarg_deprecated(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(53)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=5), 4)]
+    with pytest.warns(DeprecationWarning, match="attn_kernel"):
+        eng, out_dep = _run_engine(cfg, params, reqs, max_batch=1,
+                                   block_size=4, decode_kernel="on")
+    assert eng.cfg.attn_kernel == "on"
+    _, out_new = _run_engine(cfg, params, reqs, max_batch=1, block_size=4,
+                             attn_kernel="on")
+    assert out_dep == out_new  # the alias selects the same implementation
+    with pytest.raises(ValueError, match="conflicting"), \
+            pytest.warns(DeprecationWarning):
+        ServingEngine(cfg, params, attn_kernel="on", decode_kernel="off")
+
+
+def test_serve_flag_decode_kernel_deprecated():
+    with pytest.warns(DeprecationWarning, match="attn-kernel"):
+        assert resolve_attn_kernel_arg(None, "off") == "off"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # no warning on the new spelling
+        assert resolve_attn_kernel_arg("on", None) == "on"
+        assert resolve_attn_kernel_arg(None, None) == "auto"
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(SystemExit):
+            resolve_attn_kernel_arg("on", "off")
+
+
+def test_config_decode_kernel_property_alias():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    cfg = dataclasses.replace(cfg, attn_kernel="off")
+    assert cfg.decode_kernel == "off"  # read-only back-compat alias
+
+
+# ---------------------------------------------------------------------------
+# EngineStats satellites: TTFT + prefill throughput
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_ttft_and_prefill_throughput(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(59)
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN, eos_id=-1,
+                        block_size=4, prefill_chunk=4)
+    for _ in range(3):
+        eng.submit(rng.integers(1, cfg.vocab_size, size=7),
+                   max_new_tokens=4)
+    zero = eng.submit(rng.integers(1, cfg.vocab_size, size=4),
+                      max_new_tokens=0)  # no tokens -> no TTFT sample
+    out = eng.run()
+    assert out[zero] == []
+    s = eng.stats
+    assert s.ttft_count == 3
+    assert s.ttft_s_sum > 0 and s.mean_ttft_s > 0
+    assert s.prefill_tokens_per_s > 0
+    # Every request's first token arrives after its prefill completed, so
+    # the mean TTFT can never undercut a single chunk's wall time share.
+    assert s.mean_ttft_s < s.prefill_s + s.decode_s + 1.0
+
+
+@pytest.mark.slow
+def test_engine_prefill_kernel_chunk_sweep(tiny):
+    """Heavyweight chunk sweep under the kernel (nightly tier): every
+    prefill_chunk in 2..MAX_LEN reproduces the whole-prompt run."""
+    cfg, params = tiny
+    rng = np.random.default_rng(61)
+    reqs = [(rng.integers(1, cfg.vocab_size, size=int(n)), int(m))
+            for n, m in zip(rng.integers(5, 20, size=4),
+                            rng.integers(3, 8, size=4))]
+    kw = dict(max_batch=2, block_size=4, attn_kernel="on")
+    _, whole = _run_engine(cfg, params, reqs, prefill_chunk=None, **kw)
+    for chunk in (2, 3, 4, 6, 8, 16):
+        _, out = _run_engine(cfg, params, reqs, prefill_chunk=chunk, **kw)
+        assert out == whole, f"prefill_chunk={chunk} changed greedy outputs"
