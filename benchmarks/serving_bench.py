@@ -25,7 +25,18 @@ CPU config:
    requests are re-queued and recomputed, and their final outputs are
    asserted identical to the unpressured run.
 
-4. ATTN-KERNEL probe: the paged engine with the Pallas kernels (paged
+4. SCLAD probe: the quantized KV pool (PAPER.md §CC-MEM store-as-
+   compressed, load-as-dense) at a FIXED pool byte budget — the fp-exact
+   bf16 pool next to an int8+scales pool holding the same number of
+   device bytes (so more blocks).  Run on a head_dim=64 variant of the
+   probe config (the full-model ratio: 128 B vs 68 B per token-head,
+   1.88x; the reduced head_dim=16 would undersell it at 1.6x).  The
+   compressed pool must admit >= 1.8x the concurrent requests before the
+   first preemption, with ZERO divergent greedy tokens vs the fp run on
+   this trace (the bench-side half of the quantization quality gate; the
+   logit-error half lives in tests/test_kv_quant.py).
+
+5. ATTN-KERNEL probe: the paged engine with the Pallas kernels (paged
    flash-decode AND paged flash-prefill with its fused K/V scatter)
    forced on (interpret mode on CPU — the parity path, NOT a speed
    claim) next to the jnp gather references.  Under the kernels the
@@ -46,19 +57,29 @@ batching analysis (§4.2, Fig 6/8) prices into TCO/token.
 readable JSON (CI uploads ``BENCH_serving.json`` from the ``--smoke`` run
 as an artifact, seeding the perf trajectory across PRs).
 
+``--kv-dtype int8`` (or ``fp8``) rebuilds every engine in traces 1-3 and 5
+on a quantized pool: all the bit-identity assertions (slot==paged, prefix
+on==off, preemption recompute, kernel bit-transparency) must hold WITHIN
+the encoding, and the SCLAD probe's fp-vs-int8 zero-divergence gate runs
+regardless — CI uses this as the tripwire against silent quantization
+regressions.
+
 Run directly (``--smoke`` keeps it CI-sized):
   PYTHONPATH=src python -m benchmarks.serving_bench [--smoke] [--json PATH]
+      [--kv-dtype {fp,int8,fp8}]
 """
 from __future__ import annotations
 
 import argparse
 import json
+from dataclasses import replace as dc_replace
 
 import jax
 import numpy as np
 
 from benchmarks.common import Row
 from repro.configs.base import get_config
+from repro.models import kv_quant
 from repro.models import model as M
 from repro.serving.engine import EngineStats, ServingEngine
 
@@ -126,17 +147,33 @@ def _run_mode(cfg, params, reqs, kwargs):
     return eng.stats, results
 
 
-def run(smoke: bool = False, json_path: str | None = None) -> list[Row]:
+def _pool_block_bytes(cfg, block_size):
+    """Device bytes ONE pool block occupies across every cache leaf
+    (compressed payload + scale metadata for quantized kv_dtypes),
+    measured on the allocated layout rather than re-derived."""
+    cache = M.init_paged_cache(cfg, 1, block_size)
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in cache.values())
+
+
+def run(smoke: bool = False, json_path: str | None = None,
+        kv_dtype: str = "fp") -> list[Row]:
     n_requests = 6 if smoke else 16
     cfg = get_config(ARCH).reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rows: list[Row] = []
-    bench: dict = {"smoke": smoke, "arch": ARCH, "max_len": MAX_LEN}
+    bench: dict = {"smoke": smoke, "arch": ARCH, "max_len": MAX_LEN,
+                   "kv_dtype": kv_dtype}
+    # Pool-encoding override threaded into every trace engine ("fp" keeps
+    # each config's fp-exact default — identical pools, identical greedy).
+    q = {} if kv_dtype == "fp" else {"kv_dtype": kv_dtype}
 
     # -- 1. mixed trace: wave vs slot vs paged -------------------------------
     reqs = _mixed_trace(cfg, n_requests)
     stats, outs = {}, {}
     for mode, kwargs in _modes(n_requests).items():
+        if mode != "wave":
+            kwargs = dict(kwargs, **q)
         s, out = _run_mode(cfg, params, reqs, kwargs)
         stats[mode], outs[mode] = s, out
         rows.append((f"serving/{mode}/tokens_per_s", s.decode_s * 1e6,
@@ -160,7 +197,7 @@ def run(smoke: bool = False, json_path: str | None = None) -> list[Row]:
     # -- 2. shared-prefix trace: prefix cache off vs on, same pool ----------
     shared = _shared_trace(cfg, n_requests)
     pool = dict(mode="continuous", max_batch=6, block_size=8,
-                num_blocks=16, prefill_chunk=16)
+                num_blocks=16, prefill_chunk=16, **q)
     s_off, out_off = _run_mode(cfg, params, shared,
                                dict(pool, prefix_cache=False))
     s_on, out_on = _run_mode(cfg, params, shared,
@@ -188,7 +225,7 @@ def run(smoke: bool = False, json_path: str | None = None) -> list[Row]:
     # -- 3. preemption probe: over-committed pool, identical outputs ---------
     probe = _mixed_trace(cfg, min(n_requests, 6), seed=2)
     ample = dict(mode="continuous", max_batch=3, block_size=8,
-                 num_blocks=32, prefill_chunk=16)
+                 num_blocks=32, prefill_chunk=16, **q)
     tight = dict(ample, num_blocks=10)
     _, out_ample = _run_mode(cfg, params, probe, ample)
     s_tight, out_tight = _run_mode(cfg, params, probe, tight)
@@ -199,7 +236,57 @@ def run(smoke: bool = False, json_path: str | None = None) -> list[Row]:
                  f"preemptions={s_tight.preemptions} "
                  f"outputs_identical=True"))
 
-    # -- 4. attn kernel probe ------------------------------------------------
+    # -- 4. SCLAD probe: quantized pool at a fixed byte budget ---------------
+    # Equal device BYTES, not equal blocks: size the int8 pool to the fp
+    # pool's footprint and let the compressed layout turn the spare bytes
+    # into extra blocks (SCLAD stores compressed, loads dense — compute
+    # never sees the encoding, so greedy outputs must not move).  Each
+    # probe request occupies exactly 2 blocks for its whole life (prompt
+    # 9-12 + 3 new tokens <= 16 = 2 blocks of 8), so under a 16-request
+    # burst the pool — not lanes or prompt shape — caps concurrency.
+    # Admission is optimistic (all 16 lanes fill before any block is
+    # consumed), so the cap shows up as peak simultaneously DECODING
+    # lanes: the prefill storm preempts exactly the overflow and the
+    # survivors decode together — fp sustains pool_blocks/2 of them, the
+    # int8 pool ~1.88x that from the same bytes.
+    pcfg = dc_replace(cfg, head_dim=64)
+    pparams = M.init_params(pcfg, jax.random.PRNGKey(1))
+    fp_blocks = 16
+    fp_bpb = _pool_block_bytes(pcfg, 8)
+    i8_bpb = _pool_block_bytes(dc_replace(pcfg, kv_dtype="int8"), 8)
+    pool_bytes = fp_blocks * fp_bpb
+    i8_blocks = pool_bytes // i8_bpb
+    rng5 = np.random.default_rng(2)
+    sreqs = [(rng5.integers(1, pcfg.vocab_size,
+                            size=int(rng5.integers(9, 13))), 3)
+             for _ in range(16)]
+    probe5 = dict(mode="continuous", max_batch=16, block_size=8,
+                  prefill_chunk=8, prefix_cache=False)
+    s_fp5, out_fp5 = _run_mode(pcfg, pparams, sreqs,
+                               dict(probe5, num_blocks=fp_blocks))
+    s_i85, out_i85 = _run_mode(pcfg, pparams, sreqs,
+                               dict(probe5, num_blocks=int(i8_blocks),
+                                    kv_dtype="int8"))
+    assert out_i85 == out_fp5, (
+        "int8 pool diverged from fp-exact greedy on the SCLAD probe trace")
+    assert s_i85.kv_block_bytes < s_fp5.kv_block_bytes
+    conc5 = s_i85.peak_decode_lanes / max(s_fp5.peak_decode_lanes, 1)
+    assert conc5 >= 1.8, (
+        f"int8 at the fp pool's byte budget should sustain >=1.8x the "
+        f"concurrent requests before preemption (got {conc5:.2f}x)")
+    assert s_i85.preemptions < s_fp5.preemptions
+    rows.append(("serving/sclad/concurrency", 0.0,
+                 f"pool_bytes={pool_bytes} "
+                 f"concurrent_fp={s_fp5.peak_decode_lanes} "
+                 f"concurrent_int8={s_i85.peak_decode_lanes} "
+                 f"ratio={conc5:.2f}x greedy_identical=True"))
+    rows.append(("serving/sclad/tokens_per_s", 0.0,
+                 f"tok_s_fp={s_fp5.tokens_per_s:.1f} "
+                 f"tok_s_int8={s_i85.tokens_per_s:.1f} "
+                 f"preempt_fp={s_fp5.preemptions} "
+                 f"preempt_int8={s_i85.preemptions}"))
+
+    # -- 5. attn kernel probe ------------------------------------------------
     # Correctness tripwire: with the kernels ON (decode AND prefill), the
     # scheduler must stay bit-transparent (prefix cache on vs off — same
     # greedy outputs).  Kernel-vs-reference is a TOLERANCE property
@@ -214,7 +301,7 @@ def run(smoke: bool = False, json_path: str | None = None) -> list[Row]:
     # parity path's cost, not TPU speed.
     kreqs = _shared_trace(cfg, min(n_requests, 6), seed=4)
     kern = dict(mode="continuous", max_batch=4, block_size=8,
-                num_blocks=KV_BUDGET_TOKENS // 8, prefill_chunk=16)
+                num_blocks=KV_BUDGET_TOKENS // 8, prefill_chunk=16, **q)
     s_koff, _ = _run_mode(cfg, params, kreqs,
                           dict(kern, attn_kernel="off"))
     s_kon, out_kon = _run_mode(cfg, params, kreqs,
@@ -252,6 +339,30 @@ def run(smoke: bool = False, json_path: str | None = None) -> list[Row]:
         },
         "preemption": {"tight_pool_preemptions": s_tight.preemptions,
                        "outputs_identical": True},
+        # SCLAD probe: fp-exact vs int8+scales pools holding the SAME
+        # device bytes (head_dim=64 layout; 1.88x blocks from the
+        # compressed encoding).  greedy_identical_to_fp is the bench-side
+        # quality gate CI trips on.
+        "sclad": {
+            "probe_head_dim": 64,
+            "pool_bytes": int(pool_bytes),
+            "fp": {
+                "num_blocks": int(fp_blocks),
+                "kv_block_bytes": s_fp5.kv_block_bytes,
+                "peak_decode_lanes": s_fp5.peak_decode_lanes,
+                "preemptions": s_fp5.preemptions,
+                "decode_tokens_per_s": s_fp5.tokens_per_s,
+            },
+            "int8": {
+                "num_blocks": int(i8_blocks),
+                "kv_block_bytes": s_i85.kv_block_bytes,
+                "peak_decode_lanes": s_i85.peak_decode_lanes,
+                "preemptions": s_i85.preemptions,
+                "decode_tokens_per_s": s_i85.tokens_per_s,
+            },
+            "concurrency_vs_fp_x": conc5,
+            "greedy_identical_to_fp": True,
+        },
         # One entry per attn_kernel mode exercised by the probe; the
         # legacy "decode_kernel" key is kept for artifact continuity
         # across PRs (same numbers, pre-PR-5 spelling).
@@ -292,8 +403,14 @@ def main():
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the headline numbers as JSON "
                          "(e.g. BENCH_serving.json, uploaded by CI)")
+    ap.add_argument("--kv-dtype", default="fp",
+                    choices=[d for d in kv_quant.KV_DTYPES
+                             if d in ("fp",) + kv_quant.QUANTIZED_KV_DTYPES],
+                    help="pool encoding for the trace engines; the SCLAD "
+                         "fp-vs-int8 probe runs either way (CI tripwire)")
     args = ap.parse_args()
-    for r in run(smoke=args.smoke, json_path=args.json):
+    for r in run(smoke=args.smoke, json_path=args.json,
+                 kv_dtype=args.kv_dtype):
         print(",".join(map(str, r)))
 
 

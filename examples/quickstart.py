@@ -87,7 +87,24 @@ def main():
     #                   PR-4 spelling (DeprecationWarning);
     #   preempt_policy— pool-pressure victim selection: "youngest"
     #                   (default), "largest" (most KV blocks held) or
-    #                   "deadline" (latest submit(deadline=...) first).
+    #                   "deadline" (latest submit(deadline=...) first);
+    #   kv_dtype      — paged-pool encoding (SCLAD: store-as-compressed,
+    #                   load-as-dense).  "fp" (default) keeps the fp-exact
+    #                   bf16 pool; "int8" / "fp8" store a compressed
+    #                   payload + per-token-per-head fp32 scales and every
+    #                   reader (jnp references AND Pallas kernels, so it
+    #                   composes with attn_kernel) dequantizes on load.
+    #                   ~1.88x blocks per pool byte at head_dim=64 ->
+    #                   more concurrent requests before preemption.  The
+    #                   whole scheduling matrix (prefix cache, chunk
+    #                   sizes, preemption recompute) stays bit-identical
+    #                   WITHIN an encoding — quantization is path-
+    #                   independent, and prefix-cache chain roots are
+    #                   namespaced per encoding so pools never share
+    #                   blocks across kv_dtypes.  Vs the fp-exact pool,
+    #                   last-token logits stay within the documented
+    #                   gates (tests/test_kv_quant.py: int8 <= 0.15,
+    #                   fp8 <= 0.35 max abs error on the smoke configs).
     eng = ServingEngine(cfg, params, max_batch=2, max_len=48, eos_id=-1,
                         block_size=8, prefill_chunk=16, prefix_cache=True,
                         decode_steps=1,

@@ -113,8 +113,15 @@ class ModelConfig:
     encdec: Optional[EncDecConfig] = None
     # VLM stub frontend: number of visual patch embeddings prepended.
     num_patches: int = 0
-    # KV-cache storage dtype: "bf16" (default) or "f8" (float8_e4m3fn) —
-    # halves decode KV bytes/capacity (KVQuant-style, beyond-paper §Perf).
+    # KV-cache storage representation.  Dense stripes accept the legacy
+    # values: "bf16" (default; alias "fp") or "f8" (float8_e4m3fn storage
+    # — halves decode KV bytes/capacity, KVQuant-style).  The PAGED pool
+    # (serving engine) additionally accepts the SCLAD quantized layouts
+    # "int8" / "fp8": the pool is stored as a compressed payload plus
+    # per-position-per-head fp32 scales (models.kv_quant), dequantized on
+    # the load path by both the jnp references and the Pallas kernels —
+    # PAPER.md §CC-MEM's Store-as-Compressed, Load-as-Dense applied to
+    # the serving KV footprint.  Composes with ``attn_kernel``.
     kv_dtype: str = "bf16"
     # Attention-kernel implementation for BOTH serving hot paths — paged
     # flash-decode (kernels.flash_decode.ops) and paged flash-prefill
@@ -134,6 +141,8 @@ class ModelConfig:
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // max(self.num_heads, 1))
         assert self.family in FAMILIES, self.family
+        assert self.kv_dtype in ("fp", "bf16", "f8", "int8", "fp8"), \
+            self.kv_dtype
         assert self.attn_kernel in ("auto", "on", "off"), self.attn_kernel
         if self.num_heads and self.num_kv_heads:
             assert self.num_heads % self.num_kv_heads == 0

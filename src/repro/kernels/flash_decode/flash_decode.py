@@ -109,9 +109,9 @@ def flash_decode(q, k_cache, v_cache, lengths, *, block_k: int = 128,
     return out.reshape(B, H, D)
 
 
-def _paged_decode_kernel(lens_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
-                         acc_ref, m_ref, l_ref, *, bs: int, block_k: int,
-                         sm_scale: float):
+def _paged_decode_kernel(lens_ref, tbl_ref, q_ref, k_ref, v_ref, *rest,
+                         bs: int, block_k: int, sm_scale: float,
+                         quantized: bool):
     """One program = one pool block of one (row, kv_head) pair.
 
     lens_ref (B,) / tbl_ref (B, T): scalar-prefetch SMEM (the table also
@@ -119,7 +119,17 @@ def _paged_decode_kernel(lens_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
     grid step's pool block, already resolved through the table; o_ref
     (rep, D).  acc/m/l: VMEM scratch carrying the online softmax across
     the T (innermost, sequential) grid dimension.
+
+    ``quantized`` (SCLAD pool): two extra (bs, 1) fp32 refs ks/vs carry the
+    block's per-position scales (resolved through the SAME table walk), and
+    the load path expands payload * scale in fp32 before the usual math —
+    compressed bytes are all that crosses HBM; compute sees dense values.
     """
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, acc_ref, m_ref, l_ref = rest
     b, i = pl.program_id(0), pl.program_id(2)
     T = pl.num_programs(2)
     length = lens_ref[b]
@@ -138,6 +148,17 @@ def _paged_decode_kernel(lens_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
         for s0 in range(0, bs, block_k):  # static sub-tiling of the block
             k = k_ref[s0:s0 + block_k, :]
             v = v_ref[s0:s0 + block_k, :]
+            if quantized:
+                # Load-as-Dense: (bs', D) payload * (bs', 1) scale in fp32,
+                # then ROUNDED to the compute dtype — the exact cast chain
+                # of ``kv_quant.dequantize(..., q.dtype)`` in the jnp
+                # reference, so both implementations score bitwise-equal
+                # dense values and the fp path's ref/kernel greedy
+                # bit-identity carries over to quantized pools.
+                k = (k.astype(jnp.float32)
+                     * ks_ref[s0:s0 + block_k, :]).astype(q_ref.dtype)
+                v = (v.astype(jnp.float32)
+                     * vs_ref[s0:s0 + block_k, :]).astype(q_ref.dtype)
             s = q @ k.astype(jnp.float32).T  # (rep, block_k)
             pos = i * bs + s0 + jax.lax.broadcasted_iota(
                 jnp.int32, (1, block_k), 1)
@@ -160,7 +181,8 @@ def _paged_decode_kernel(lens_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
 def paged_flash_decode(q, k_pool, v_pool, lengths, block_tables, *,
-                       block_k: int = 0, interpret: bool = False):
+                       block_k: int = 0, interpret: bool = False,
+                       kv_scales=None):
     """Decode attention straight out of the paged KV block pool.
 
     q:            (B, H, D) — one new token per row;
@@ -177,6 +199,11 @@ def paged_flash_decode(q, k_pool, v_pool, lengths, block_tables, *,
                   block per step).  Rounded down to a divisor of ``bs`` so
                   a caller tuned for the dense kernel's 128 can pass the
                   same value against any pool block size.
+    kv_scales:    optional (k_scale, v_scale) (N, bs, Hk) fp32 — the SCLAD
+                  quantized pool's per-position-per-head scales.  They ride
+                  the same table-walk BlockSpecs as the payload (one (bs, 1)
+                  scale tile per program) and the dequant multiply is fused
+                  into the block-streaming loop in VMEM.
 
     Returns (B, H, D).  KV bytes are read exactly once per token, block by
     block through the table — never gathered into a per-lane dense copy.
@@ -190,20 +217,34 @@ def paged_flash_decode(q, k_pool, v_pool, lengths, block_tables, *,
         bk -= 1
     sm_scale = 1.0 / math.sqrt(D)
     qt = q.reshape(B, Hk, rep, D)
+    quantized = kv_scales is not None
+
+    pool_blk = pl.BlockSpec((None, bs, None, D),
+                            lambda b, h, i, lens, tbl: (tbl[b, i], 0, h, 0))
+    # Scales get a trailing singleton ((N, bs, Hk) -> (N, bs, Hk, 1), a
+    # layout-preserving view) so their table-walked tile is 2D (bs, 1).
+    scale_blk = pl.BlockSpec((None, bs, None, 1),
+                             lambda b, h, i, lens, tbl: (tbl[b, i], 0, h, 0))
+    in_specs = [
+        pl.BlockSpec((None, None, rep, D),
+                     lambda b, h, i, lens, tbl: (b, h, 0, 0)),
+        # The pool is indexed THROUGH the prefetched table: each grid
+        # step DMAs exactly one shared block for one kv head.
+        pool_blk,
+        pool_blk,
+    ]
+    inputs = [jnp.asarray(lengths, jnp.int32),
+              jnp.asarray(block_tables, jnp.int32), qt, k_pool, v_pool]
+    if quantized:
+        k_scale, v_scale = kv_scales
+        in_specs += [scale_blk, scale_blk]
+        inputs += [k_scale.astype(jnp.float32)[..., None],
+                   v_scale.astype(jnp.float32)[..., None]]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,  # lengths, block_tables
         grid=(B, Hk, T),
-        in_specs=[
-            pl.BlockSpec((None, None, rep, D),
-                         lambda b, h, i, lens, tbl: (b, h, 0, 0)),
-            # The pool is indexed THROUGH the prefetched table: each grid
-            # step DMAs exactly one shared block for one kv head.
-            pl.BlockSpec((None, bs, None, D),
-                         lambda b, h, i, lens, tbl: (tbl[b, i], 0, h, 0)),
-            pl.BlockSpec((None, bs, None, D),
-                         lambda b, h, i, lens, tbl: (tbl[b, i], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, None, rep, D),
                                lambda b, h, i, lens, tbl: (b, h, 0, 0)),
         scratch_shapes=[
@@ -214,10 +255,9 @@ def paged_flash_decode(q, k_pool, v_pool, lengths, block_tables, *,
     )
     out = pl.pallas_call(
         functools.partial(_paged_decode_kernel, bs=bs, block_k=bk,
-                          sm_scale=sm_scale),
+                          sm_scale=sm_scale, quantized=quantized),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hk, rep, D), q.dtype),
         interpret=interpret,
-    )(jnp.asarray(lengths, jnp.int32), jnp.asarray(block_tables, jnp.int32),
-      qt, k_pool, v_pool)
+    )(*inputs)
     return out.reshape(B, H, D)

@@ -46,14 +46,18 @@ def resolve_kernel(kernel: str = "auto"):
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *, block_tables=None,
-                     kernel: str = "auto", block_k: int = 128):
+                     kernel: str = "auto", block_k: int = 128,
+                     kv_scales=None):
     """One decode-attention step.
 
     q: (B, H, D) — the new token's (rotated) queries;
     k_cache/v_cache: (B, S, Hk, D) contiguous caches, OR — when
         ``block_tables`` (B, T) int32 is given — the shared (N, bs, Hk, D)
         block pool they index;
-    lengths: scalar or (B,) int32 valid positions per row.
+    lengths: scalar or (B,) int32 valid positions per row;
+    kv_scales: optional (k_scale, v_scale) (N, bs, Hk) fp32 scales of a
+        SCLAD quantized pool (paged layout only) — both implementations
+        dequantize the compressed payload on the load path.
 
     Returns (B, H, D).  The caller owns the cache scatter of the new K/V;
     this is the read side only.
@@ -62,9 +66,11 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_tables=None,
     if block_tables is not None:
         if not use_kernel:
             return paged_decode_ref(q, k_cache, v_cache, lengths,
-                                    block_tables)
+                                    block_tables, kv_scales=kv_scales)
         return paged_flash_decode(q, k_cache, v_cache, lengths, block_tables,
-                                  block_k=block_k, interpret=interpret)
+                                  block_k=block_k, interpret=interpret,
+                                  kv_scales=kv_scales)
+    assert kv_scales is None, "kv_scales is a paged-pool layout"
     if not use_kernel:
         return decode_ref(q, k_cache, v_cache, lengths)
     S = k_cache.shape[1]

@@ -38,7 +38,8 @@ def decode_ref(q, k_cache, v_cache, lengths):
     return out.reshape(B, H, D)
 
 
-def paged_decode_ref(q, k_pool, v_pool, lengths, block_tables):
+def paged_decode_ref(q, k_pool, v_pool, lengths, block_tables,
+                     kv_scales=None):
     """Gather oracle for the paged kernel: resolve each lane's block table
     into a dense per-lane cache copy, then run ``decode_ref``.
 
@@ -46,9 +47,21 @@ def paged_decode_ref(q, k_pool, v_pool, lengths, block_tables):
     block_tables: (B, T) int32.  This MATERIALIZES the (B, T*bs, Hk, D)
     copy the kernel exists to avoid — it is the correctness oracle (and the
     ``attn_kernel="off"`` fallback), not the hot path.
+
+    kv_scales: (k_scale, v_scale) (N, bs, Hk) fp32 for a SCLAD quantized
+    pool — the gathered payload is dequantized (fp32 multiply, one cast to
+    q.dtype: ``models.kv_quant.dequantize``) before attention, the
+    load-as-dense half of the compressed layout.
     """
     B = q.shape[0]
     Hk, D = k_pool.shape[2], k_pool.shape[3]
     kc = k_pool[block_tables].reshape(B, -1, Hk, D)
     vc = v_pool[block_tables].reshape(B, -1, Hk, D)
+    if kv_scales is not None:
+        from repro.models import kv_quant
+        k_scale, v_scale = kv_scales
+        ks = k_scale[block_tables].reshape(B, -1, Hk)
+        vs = v_scale[block_tables].reshape(B, -1, Hk)
+        kc = kv_quant.dequantize(kc, ks, q.dtype)
+        vc = kv_quant.dequantize(vc, vs, q.dtype)
     return decode_ref(q, kc, vc, lengths)

@@ -59,9 +59,8 @@ def _pv_dtype(v):
 
 
 def _prefill_kernel(len_ref, start_ref, tbl_ref, q_ref, kn_ref, vn_ref,
-                    kp_ref, vp_ref, o_ref, ko_ref, vo_ref,
-                    acc_ref, m_ref, l_ref, *, bs: int, prefix: int,
-                    t_read: int, sm_scale: float):
+                    kp_ref, vp_ref, *rest, bs: int, prefix: int,
+                    t_read: int, sm_scale: float, kv_dtype=None):
     """One program = one grid step of one (row, kv_head) pair.
 
     len/start (B,) and tbl (B, T): scalar-prefetch SMEM (the table also
@@ -72,7 +71,24 @@ def _prefill_kernel(len_ref, start_ref, tbl_ref, q_ref, kn_ref, vn_ref,
     ko/vo_ref (bs, D): the (aliased) pool block being written back.
     acc/m/l: VMEM scratch carrying the online softmax across the
     (innermost, sequential) grid dimension.
+
+    ``kv_dtype`` ("int8"/"fp8"; None = fp pool) switches on the SCLAD
+    layout: ksp/vsp_ref and kso/vso_ref carry the (bs, 1) per-position
+    scale tiles riding the same table walk.  Context loads expand
+    payload * scale in fp32; the chunk phase fake-quantizes its own K/V
+    (matching what the scatter will store, so in-chunk and from-pool
+    scoring agree); the scatter phase reproduces
+    ``models.kv_quant.quantize`` operation-for-operation so pool bytes are
+    bitwise identical to the host-side reference scatter.
     """
+    if kv_dtype is not None:
+        (ksp_ref, vsp_ref, o_ref, ko_ref, vo_ref, kso_ref, vso_ref,
+         acc_ref, m_ref, l_ref) = rest
+        qm = 127.0 if kv_dtype == "int8" else 448.0
+    else:
+        ksp_ref = vsp_ref = kso_ref = vso_ref = None
+        o_ref, ko_ref, vo_ref, acc_ref, m_ref, l_ref = rest
+        qm = None
     b, i = pl.program_id(0), pl.program_id(2)
     n_i = pl.num_programs(2)
     T = tbl_ref.shape[1]
@@ -83,6 +99,23 @@ def _prefill_kernel(len_ref, start_ref, tbl_ref, q_ref, kn_ref, vn_ref,
     length = len_ref[b]
     start = start_ref[b]
     pad = P - length
+
+    def fake_quant(x):
+        """fp32 (rows, D) -> the value a pool reader will observe: the
+        round-trip of ``kv_quant.quantize``/``dequantize`` without the
+        payload-dtype container (exact for int8 — round() already yields
+        the representable integral grid — and an actual f8 cast for fp8).
+        """
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        # Constant multiply, not division — matches kv_quant.quantize
+        # bitwise in every tracing context (XLA rewrites /const under jit).
+        scale = jnp.where(amax > 0, amax * (1.0 / qm), 1.0)
+        qv = x / scale
+        if kv_dtype == "int8":
+            qv = jnp.round(qv)
+        else:
+            qv = qv.astype(jnp.float8_e4m3fn).astype(jnp.float32)
+        return qv * scale
 
     @pl.when(i == 0)
     def _init():
@@ -108,11 +141,20 @@ def _prefill_kernel(len_ref, start_ref, tbl_ref, q_ref, kn_ref, vn_ref,
     @pl.when((i < t_read) & (i * bs < start))
     def _ctx():
         q = q_ref[...].astype(jnp.float32) * sm_scale
-        k = kp_ref[...]
-        s = q @ k.astype(jnp.float32).T  # (rows, bs)
+        k = kp_ref[...].astype(jnp.float32)
+        v = vp_ref[...]
+        if kv_dtype is not None:
+            # Load-as-Dense: (bs, D) payload * (bs, 1) scale in fp32,
+            # then ROUNDED to the compute dtype — the reference's
+            # ``kv_quant.dequantize(..., q.dtype)`` cast chain, so both
+            # implementations attend to bitwise-equal dense values.
+            k = (k * ksp_ref[...]).astype(q_ref.dtype) \
+                .astype(jnp.float32)
+            v = (v.astype(jnp.float32) * vsp_ref[...]).astype(q_ref.dtype)
+        s = q @ k.T  # (rows, bs)
         pos = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
         s = jnp.where(pos < start, s, NEG_INF)
-        online_update(s, vp_ref[...])
+        online_update(s, v)
 
     # In-chunk self-attention: causal over this call's tokens with pad
     # keys dropped — the mask the pre-kernel path materialized densely,
@@ -120,13 +162,21 @@ def _prefill_kernel(len_ref, start_ref, tbl_ref, q_ref, kn_ref, vn_ref,
     @pl.when(i == t_read)
     def _chunk():
         q = q_ref[...].astype(jnp.float32) * sm_scale
-        k = kn_ref[...]
-        s = q @ k.astype(jnp.float32).T  # (rows, S)
+        k = kn_ref[...].astype(jnp.float32)
+        v = vn_ref[...]
+        if kv_dtype is not None:
+            # Attend to the chunk's K/V as quantized — identical to how a
+            # later chunk / decode step reads it back from the pool.  The
+            # compute-dtype round-trip matches ``kv_quant.fake_quant``
+            # (which returns x.dtype) bitwise.
+            k = fake_quant(k).astype(kn_ref.dtype).astype(jnp.float32)
+            v = fake_quant(v.astype(jnp.float32)).astype(vn_ref.dtype)
+        s = q @ k.T  # (rows, S)
         qpos = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // rep
         kpos = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
         real = (kpos < prefix) | (kpos >= prefix + pad)
         s = jnp.where((kpos <= qpos) & real, s, NEG_INF)
-        online_update(s, vn_ref[...])
+        online_update(s, v)
 
     # Scatter phase: merge one destination block.  Offset o holds cache
     # position w*bs + o = start + j; compacted index j maps back to padded
@@ -143,8 +193,29 @@ def _prefill_kernel(len_ref, start_ref, tbl_ref, q_ref, kn_ref, vn_ref,
         col = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
         oh = ((col == src) & valid).astype(jnp.float32)  # (bs, S)
         kvd = ko_ref.dtype
-        new_k = (oh @ kn_ref[...].astype(jnp.float32)).astype(kvd)
-        new_v = (oh @ vn_ref[...].astype(jnp.float32)).astype(kvd)
+        # The one-hot matmul places each valid destination row EXACTLY
+        # (0/1 fp32 coefficients copy the fp32 view of the bf16 row), so
+        # the quantization below starts from the same fp32 values as the
+        # host-side reference — payload and scales match bitwise.
+        new_kf = oh @ kn_ref[...].astype(jnp.float32)  # (bs, D)
+        new_vf = oh @ vn_ref[...].astype(jnp.float32)
+        if kv_dtype is not None:
+            def quant(xf):  # kv_quant.quantize, op-for-op
+                amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+                scale = jnp.where(amax > 0, amax * (1.0 / qm), 1.0)
+                qv = xf / scale
+                if kv_dtype == "int8":
+                    qv = jnp.round(qv)
+                return qv.astype(kvd), scale
+            new_k, ksc = quant(new_kf)
+            new_v, vsc = quant(new_vf)
+            # Invalid rows quantize garbage (all-zero -> scale 1), but the
+            # merge passes the OLD payload/scale through bitwise.
+            kso_ref[...] = jnp.where(valid, ksc, ksp_ref[...])
+            vso_ref[...] = jnp.where(valid, vsc, vsp_ref[...])
+        else:
+            new_k = new_kf.astype(kvd)
+            new_v = new_vf.astype(kvd)
         ko_ref[...] = jnp.where(valid, new_k, kp_ref[...])
         vo_ref[...] = jnp.where(valid, new_v, vp_ref[...])
 
@@ -155,10 +226,12 @@ def _prefill_kernel(len_ref, start_ref, tbl_ref, q_ref, kn_ref, vn_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("prefix", "has_ctx", "interpret"))
+                   static_argnames=("prefix", "has_ctx", "interpret",
+                                    "kv_dtype"))
 def paged_flash_prefill(q, k_new, v_new, k_pool, v_pool, lengths,
                         block_tables, start, *, prefix: int = 0,
-                        has_ctx: bool = True, interpret: bool = False):
+                        has_ctx: bool = True, interpret: bool = False,
+                        kv_scales=None, kv_dtype=None):
     """Chunked-prefill attention + fused K/V scatter on the paged pool.
 
     q:             (B, S, H, D) rotated chunk queries (S = prefix + P,
@@ -174,10 +247,19 @@ def paged_flash_prefill(q, k_new, v_new, k_pool, v_pool, lengths,
     start:         (B,) int32 cache positions already filled per row;
     prefix:        static vlm patch-prefix length (first chunk only);
     has_ctx:       static — False for first chunks (start == 0 rows): the
-                   table-walk read phase is dropped from the grid.
+                   table-walk read phase is dropped from the grid;
+    kv_scales:     optional (k_scale, v_scale) (N, bs, Hk) fp32 scales of a
+                   SCLAD quantized pool, with static ``kv_dtype``
+                   ("int8"/"fp8") naming the payload encoding.  The scales
+                   ride the same table-walked BlockSpecs as the payload
+                   (reshaped to (N, bs, Hk, 1) so their tile is 2D) and are
+                   aliased in place alongside it; the chunk's new K/V is
+                   QUANTIZED IN-KERNEL before the write-back, so compressed
+                   bytes are the only thing that round-trips HBM.
 
-    Returns (attn_out (B, S, H*D), k_pool', v_pool').  Cached KV bytes are
-    read exactly once per chunk, block by block through the table — never
+    Returns (attn_out (B, S, H*D), k_pool', v_pool') — plus
+    (k_scale', v_scale') for quantized pools.  Cached KV bytes are read
+    exactly once per chunk, block by block through the table — never
     gathered into a per-lane dense copy — and the new K/V lands in the
     pool inside the same kernel invocation.
     """
@@ -187,6 +269,8 @@ def paged_flash_prefill(q, k_new, v_new, k_pool, v_pool, lengths,
     bs = k_pool.shape[1]
     T = block_tables.shape[1]
     sm_scale = 1.0 / math.sqrt(D)
+    quantized = kv_scales is not None
+    assert quantized == (kv_dtype is not None)
 
     qt = q.reshape(B, S, Hk, rep, D).transpose(0, 2, 1, 3, 4) \
         .reshape(B, Hk, S * rep, D)
@@ -210,45 +294,72 @@ def paged_flash_prefill(q, k_new, v_new, k_pool, v_pool, lengths,
         j = jnp.maximum(i - t_read, 0)
         return (tbl[b, jnp.minimum(starts[b] // bs + j, T - 1)], 0, h, 0)
 
+    seq_blk = pl.BlockSpec((None, None, S, D),
+                           lambda b, h, i, lens, starts, tbl: (b, h, 0, 0))
+    pool_rd = pl.BlockSpec((None, bs, None, D), pool_read_blk)
+    pool_wr = pl.BlockSpec((None, bs, None, D), pool_write_blk)
+    # Scales get a trailing singleton ((N, bs, Hk) -> (N, bs, Hk, 1), a
+    # layout-preserving view) so their table-walked tile is 2D (bs, 1).
+    scale_rd = pl.BlockSpec((None, bs, None, 1), pool_read_blk)
+    scale_wr = pl.BlockSpec((None, bs, None, 1), pool_write_blk)
+
+    in_specs = [
+        pl.BlockSpec((None, None, S * rep, D),
+                     lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
+        seq_blk, seq_blk, pool_rd, pool_rd,
+    ]
+    out_specs = [
+        pl.BlockSpec((None, None, S * rep, D),
+                     lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
+        pool_wr, pool_wr,
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((B, Hk, S * rep, D), q.dtype),
+        jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+        jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+    ]
+    inputs = [jnp.asarray(lengths, jnp.int32), jnp.asarray(start, jnp.int32),
+              jnp.asarray(block_tables, jnp.int32), qt, knt, vnt,
+              k_pool, v_pool]
+    # Flat input indices (scalar-prefetch leaves included): pools are
+    # inputs 6/7 -> outputs 1/2 (and scales 8/9 -> 3/4 when quantized), so
+    # every pool update happens in place.
+    aliases = {6: 1, 7: 2}
+    if quantized:
+        k_scale, v_scale = kv_scales
+        ks4 = k_scale.astype(jnp.float32)[..., None]
+        vs4 = v_scale.astype(jnp.float32)[..., None]
+        in_specs += [scale_rd, scale_rd]
+        out_specs += [scale_wr, scale_wr]
+        out_shape += [jax.ShapeDtypeStruct(ks4.shape, jnp.float32),
+                      jax.ShapeDtypeStruct(vs4.shape, jnp.float32)]
+        inputs += [ks4, vs4]
+        aliases = {6: 1, 7: 2, 8: 3, 9: 4}
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,  # lengths, start, block_tables
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((None, None, S * rep, D),
-                         lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
-            pl.BlockSpec((None, None, S, D),
-                         lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
-            pl.BlockSpec((None, None, S, D),
-                         lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
-            pl.BlockSpec((None, bs, None, D), pool_read_blk),
-            pl.BlockSpec((None, bs, None, D), pool_read_blk),
-        ],
-        out_specs=[
-            pl.BlockSpec((None, None, S * rep, D),
-                         lambda b, h, i, lens, starts, tbl: (b, h, 0, 0)),
-            pl.BlockSpec((None, bs, None, D), pool_write_blk),
-            pl.BlockSpec((None, bs, None, D), pool_write_blk),
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((S * rep, D), jnp.float32),  # acc
             pltpu.VMEM((S * rep, 1), jnp.float32),  # running max
             pltpu.VMEM((S * rep, 1), jnp.float32),  # running denom
         ],
     )
-    out, k_pool, v_pool = pl.pallas_call(
+    results = pl.pallas_call(
         functools.partial(_prefill_kernel, bs=bs, prefix=prefix,
-                          t_read=t_read, sm_scale=sm_scale),
+                          t_read=t_read, sm_scale=sm_scale,
+                          kv_dtype=kv_dtype),
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((B, Hk, S * rep, D), q.dtype),
-            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
-            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
-        ],
-        # Flat input indices (scalar-prefetch leaves included): pools are
-        # inputs 6/7 -> outputs 1/2, so the update happens in place.
-        input_output_aliases={6: 1, 7: 2},
+        out_shape=out_shape,
+        input_output_aliases=aliases,
         interpret=interpret,
-    )(jnp.asarray(lengths, jnp.int32), jnp.asarray(start, jnp.int32),
-      jnp.asarray(block_tables, jnp.int32), qt, knt, vnt, k_pool, v_pool)
-    out = out.reshape(B, Hk, S, rep, D).transpose(0, 2, 1, 3, 4)
-    return out.reshape(B, S, H * D), k_pool, v_pool
+    )(*inputs)
+    out = results[0].reshape(B, Hk, S, rep, D).transpose(0, 2, 1, 3, 4)
+    out = out.reshape(B, S, H * D)
+    if quantized:
+        _, k_pool, v_pool, ks4, vs4 = results
+        return out, k_pool, v_pool, ks4[..., 0], vs4[..., 0]
+    _, k_pool, v_pool = results
+    return out, k_pool, v_pool

@@ -37,7 +37,8 @@ ATTN_KERNEL_MODES = DECODE_KERNEL_MODES  # ("auto", "on", "off")
 
 def prefill_attention(q, k_new, v_new, k_pool, v_pool, lengths,
                       block_tables, *, start: Optional[jnp.ndarray] = None,
-                      prefix: int = 0, kernel: str = "auto"):
+                      prefix: int = 0, kernel: str = "auto",
+                      kv_scales=None, kv_dtype: Optional[str] = None):
     """One layer of paged chunked-prefill attention + new-token K/V scatter.
 
     q: (B, S, H, D) rotated chunk queries (S = prefix + P, prompt tokens
@@ -45,7 +46,12 @@ def prefill_attention(q, k_new, v_new, k_pool, v_pool, lengths,
     k_pool/v_pool: (N, bs, Hk, D) shared block pool; lengths: (B,) int32
     true chunk token counts; block_tables: (B, T) int32; start: None for
     first chunks, else (B,) int32 cached positions per row; prefix: static
-    vlm patch-prefix length (first chunk only).
+    vlm patch-prefix length (first chunk only); kv_scales + kv_dtype:
+    (k_scale, v_scale) (N, bs, Hk) fp32 scale leaves and the payload
+    encoding ("int8"/"fp8") of a SCLAD quantized pool — both paths
+    dequantize context on load, fake-quantize the chunk's own K/V before
+    attending, and write quantized payload + scales (returning the
+    5-tuple with k_scale'/v_scale' appended).
 
     Returns (attn_out (B, S, H*D), k_pool', v_pool').  On the kernel path
     the cached context is streamed through the block table (no dense
@@ -57,11 +63,13 @@ def prefill_attention(q, k_new, v_new, k_pool, v_pool, lengths,
     if not use_kernel:
         return prefill_attention_ref(q, k_new, v_new, k_pool, v_pool,
                                      lengths, block_tables, start=start,
-                                     prefix=prefix)
+                                     prefix=prefix, kv_scales=kv_scales,
+                                     kv_dtype=kv_dtype)
     B = q.shape[0]
     start_v = jnp.zeros((B,), jnp.int32) if start is None \
         else jnp.asarray(start, jnp.int32)
     return paged_flash_prefill(q, k_new, v_new, k_pool, v_pool, lengths,
                                block_tables, start_v, prefix=prefix,
                                has_ctx=start is not None,
-                               interpret=interpret)
+                               interpret=interpret, kv_scales=kv_scales,
+                               kv_dtype=kv_dtype)

@@ -31,8 +31,8 @@ import jax.numpy as jnp
 def prefill_attention_ref(q, k_new, v_new, k_pool, v_pool, lengths,
                           block_tables,
                           start: Optional[jnp.ndarray] = None,
-                          prefix: int = 0
-                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                          prefix: int = 0,
+                          kv_scales=None, kv_dtype: Optional[str] = None):
     """One layer of chunked-prefill attention against a paged KV pool.
 
     q:             (B, S, H, D)  rotated queries of this chunk (S = prefix
@@ -47,11 +47,22 @@ def prefill_attention_ref(q, k_new, v_new, k_pool, v_pool, lengths,
                    cached context); else (B,) int32 cache positions already
                    filled per row — the chunk attends to positions
                    [0, start) gathered through the table;
-    prefix:        static vlm patch-prefix length (first chunk only).
+    prefix:        static vlm patch-prefix length (first chunk only);
+    kv_scales:     optional (k_scale, v_scale) (N, bs, Hk) fp32 scales of a
+                   SCLAD quantized pool, with ``kv_dtype`` ("int8"/"fp8")
+                   naming the payload encoding.  Quantized semantics: the
+                   gathered context payload is dequantized on load, the
+                   chunk's OWN in-flight K/V is fake-quantized before
+                   attention (every reader observes each token through
+                   ``dequantize(quantize(x))`` — in-chunk and from-pool
+                   scoring agree, so greedy bit-identity across chunk
+                   sizes / prefix hits / preemption recomputes survives
+                   quantization), and the scatter writes payload + scales.
 
     Returns (attn_out (B, S, H*D) in q.dtype, k_pool', v_pool') with the
     chunk's new K/V left-compacted and scattered through the table at
-    positions ``start + i`` (junk-tail writes dropped).
+    positions ``start + i`` (junk-tail writes dropped); quantized calls
+    append (k_scale', v_scale').
     """
     B, S, H, D = q.shape
     Hk = k_new.shape[2]
@@ -61,6 +72,9 @@ def prefill_attention_ref(q, k_new, v_new, k_pool, v_pool, lengths,
     pad = (P - lengths).astype(jnp.int32)  # (B,)
     start_v = jnp.zeros((B,), jnp.int32) if start is None \
         else jnp.asarray(start, jnp.int32)
+    quantized = kv_scales is not None
+    if quantized:
+        from repro.models import kv_quant
 
     # Key j is visible to query i iff causal AND j is not a pad slot.
     sidx = jnp.arange(S)
@@ -69,16 +83,27 @@ def prefill_attention_ref(q, k_new, v_new, k_pool, v_pool, lengths,
         & real_key[:, None, :]  # (B, S, S)
 
     kk, vv = k_new, v_new
+    if quantized:
+        # Store-as-compressed consistency: attend to the chunk's K/V as a
+        # pool reader will see it once written.
+        kk = kv_quant.fake_quant(k_new, kv_dtype)
+        vv = kv_quant.fake_quant(v_new, kv_dtype)
     if start is not None:
         # Dense per-lane context gather — the O(B*T*bs*Hk*D) copy this
         # oracle pins and the kernel path provably never materializes.
         bs = k_pool.shape[1]
         kg = k_pool[block_tables].reshape(B, -1, *k_pool.shape[2:])
         vg = v_pool[block_tables].reshape(B, -1, *v_pool.shape[2:])
+        if quantized:
+            k_scale, v_scale = kv_scales
+            ksg = k_scale[block_tables].reshape(B, -1, Hk)
+            vsg = v_scale[block_tables].reshape(B, -1, Hk)
+            kg = kv_quant.dequantize(kg, ksg, q.dtype)
+            vg = kv_quant.dequantize(vg, vsg, q.dtype)
         ctx_len = block_tables.shape[1] * bs
         ctx_mask = jnp.arange(ctx_len)[None] < start_v[:, None]  # (B, T*bs)
-        kk = jnp.concatenate([kg.astype(q.dtype), k_new], axis=1)
-        vv = jnp.concatenate([vg.astype(q.dtype), v_new], axis=1)
+        kk = jnp.concatenate([kg.astype(q.dtype), kk], axis=1)
+        vv = jnp.concatenate([vg.astype(q.dtype), vv], axis=1)
         mask = jnp.concatenate(
             [jnp.broadcast_to(ctx_mask[:, None, :], (B, S, ctx_len)),
              jnp.broadcast_to(mask, (B, S, S))], axis=-1)
@@ -91,6 +116,12 @@ def prefill_attention_ref(q, k_new, v_new, k_pool, v_pool, lengths,
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, vv).reshape(B, S, H * D)
 
+    if quantized:
+        k_pool, v_pool, k_scale, v_scale = scatter_new_kv_ref(
+            k_new, v_new, k_pool, v_pool, lengths, block_tables,
+            start=start, prefix=prefix, kv_scales=kv_scales,
+            kv_dtype=kv_dtype)
+        return out, k_pool, v_pool, k_scale, v_scale
     k_pool, v_pool = scatter_new_kv_ref(k_new, v_new, k_pool, v_pool,
                                         lengths, block_tables,
                                         start=start, prefix=prefix)
@@ -98,8 +129,8 @@ def prefill_attention_ref(q, k_new, v_new, k_pool, v_pool, lengths,
 
 
 def scatter_new_kv_ref(k_new, v_new, k_pool, v_pool, lengths, block_tables,
-                       start: Optional[jnp.ndarray] = None, prefix: int = 0
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                       start: Optional[jnp.ndarray] = None, prefix: int = 0,
+                       kv_scales=None, kv_dtype: Optional[str] = None):
     """Host-side new-token K/V scatter (the ``attn_kernel="off"`` write
     path, bit-exact with the pre-fusion ``prefill_slots`` epilogue).
 
@@ -107,6 +138,12 @@ def scatter_new_kv_ref(k_new, v_new, k_pool, v_pool, lengths, block_tables,
     after the prefix — then scatters through the block table at cache
     positions ``start + i``.  Junk-tail entries are redirected out of
     bounds and dropped so they cannot touch another row's blocks.
+
+    With ``kv_scales`` + ``kv_dtype`` (SCLAD pool) the compacted rows are
+    quantized (``models.kv_quant.quantize`` — per-row, path-independent,
+    so compaction and quantization commute) and both payload and scales
+    scatter through the same indices; returns the 4-tuple
+    (k_pool, v_pool, k_scale, v_scale).
     """
     B, S = k_new.shape[0], k_new.shape[1]
     N, bs = k_pool.shape[0], k_pool.shape[1]
@@ -131,6 +168,16 @@ def scatter_new_kv_ref(k_new, v_new, k_pool, v_pool, lengths, block_tables,
     writable = jnp.arange(S)[None] < prefix + lengths[:, None]
     blk = jnp.where(writable, blk, N)  # junk -> out of bounds -> dropped
     off = dest % bs
+    if kv_scales is not None:
+        from repro.models import kv_quant
+        k_scale, v_scale = kv_scales
+        kq, ks1 = kv_quant.quantize(compact(k_new), kv_dtype)
+        vq, vs1 = kv_quant.quantize(compact(v_new), kv_dtype)
+        k_pool = k_pool.at[blk, off].set(kq, mode="drop")
+        v_pool = v_pool.at[blk, off].set(vq, mode="drop")
+        k_scale = k_scale.at[blk, off].set(ks1, mode="drop")
+        v_scale = v_scale.at[blk, off].set(vs1, mode="drop")
+        return k_pool, v_pool, k_scale, v_scale
     k_pool = k_pool.at[blk, off].set(compact(k_new).astype(kvd), mode="drop")
     v_pool = v_pool.at[blk, off].set(compact(v_new).astype(kvd), mode="drop")
     return k_pool, v_pool

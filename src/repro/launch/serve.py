@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config, list_archs
+from repro.models import kv_quant
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
 from repro.serving.sampler import SamplerConfig
@@ -79,6 +80,15 @@ def main():
                     choices=["auto", "on", "off"],
                     help="DEPRECATED alias of --attn-kernel (the knob now "
                          "selects the prefill kernel too)")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=list(kv_quant.KV_DTYPES),
+                    help="paged KV pool representation: fp/bf16 (dense "
+                         "compute-dtype blocks), f8 (dense float8 "
+                         "stripes), or the SCLAD compressed encodings "
+                         "int8/fp8 (payload + per-position fp32 scales; "
+                         "~2x token context per device byte, dequantized "
+                         "on the load path by references and kernels "
+                         "alike).  Default: the config's setting")
     ap.add_argument("--preempt-policy", default="youngest",
                     choices=["youngest", "largest", "deadline"],
                     help="which in-flight request pool pressure preempts: "
@@ -102,7 +112,7 @@ def main():
         prefix_cache=args.prefix_cache, decode_steps=args.decode_steps,
         attn_kernel=resolve_attn_kernel_arg(args.attn_kernel,
                                             args.decode_kernel),
-        preempt_policy=args.preempt_policy,
+        preempt_policy=args.preempt_policy, kv_dtype=args.kv_dtype,
         sampler=SamplerConfig(temperature=args.temperature, top_k=50))
 
     rng = np.random.default_rng(args.seed)

@@ -267,6 +267,7 @@ def attention_decode(
     position: jnp.ndarray,
     use_rope: bool = True,
     block_tables: Optional[jnp.ndarray] = None,
+    kv_scales: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
 ):
     """Single-token decode with in-place cache update.
 
@@ -296,7 +297,16 @@ def attention_decode(
         lands in a block exclusive to its row (fresh growth or
         copy-on-write — ``BlockStore.ensure_writable``).
 
-    Returns (out (B,1,d), k_cache, v_cache).
+    kv_scales: (k_scale, v_scale) (N, bs, Hk) fp32 leaves of a SCLAD
+    quantized pool (paged layout only, ``cfg.kv_dtype`` in "int8"/"fp8").
+    When given, the new token's K/V is quantized (``models.kv_quant``) and
+    the payload + per-head scales scattered through the table; readers
+    dequantize on load.  The quantized write runs here in jnp for BOTH
+    ``attn_kernel`` read paths, so the pool bytes a decode step leaves
+    behind are identical whichever kernel serves the read.
+
+    Returns (out (B,1,d), k_cache, v_cache) — plus (k_scale, v_scale)
+    appended when ``kv_scales`` is given.
     """
     from repro.kernels.flash_decode import ops as decode_ops
 
@@ -308,6 +318,7 @@ def attention_decode(
         k = apply_rope(cfg, k, pos[:, None])
     lengths = pos + 1  # row b's valid cache positions, incl. the new token
     if block_tables is None:
+        assert kv_scales is None, "kv_scales is a paged-pool layout"
         rows = jnp.arange(B)
         k_cache = k_cache.at[rows, pos].set(k[:, 0].astype(k_cache.dtype))
         v_cache = v_cache.at[rows, pos].set(v[:, 0].astype(v_cache.dtype))
@@ -322,6 +333,21 @@ def attention_decode(
         # (their stale ``lengths`` only ever cover trash blocks, which the
         # caller's active mask keeps out of every live result).
         blk = block_tables[rows, pos // bs]
+        if kv_scales is not None:
+            from repro.models import kv_quant
+            k_scale, v_scale = kv_scales
+            kq, ks1 = kv_quant.quantize(k[:, 0], cfg.kv_dtype)  # (B,Hk,D)/(B,Hk)
+            vq, vs1 = kv_quant.quantize(v[:, 0], cfg.kv_dtype)
+            k_cache = k_cache.at[blk, pos % bs].set(kq)
+            v_cache = v_cache.at[blk, pos % bs].set(vq)
+            k_scale = k_scale.at[blk, pos % bs].set(ks1)
+            v_scale = v_scale.at[blk, pos % bs].set(vs1)
+            out = decode_ops.decode_attention(
+                q[:, 0], k_cache, v_cache, lengths,
+                block_tables=block_tables, kernel=cfg.attn_kernel,
+                kv_scales=(k_scale, v_scale))
+            return (out.reshape(B, 1, -1).astype(x.dtype) @ p["wo"],
+                    k_cache, v_cache, k_scale, v_scale)
         k_cache = k_cache.at[blk, pos % bs].set(k[:, 0].astype(k_cache.dtype))
         v_cache = v_cache.at[blk, pos % bs].set(v[:, 0].astype(v_cache.dtype))
         out = decode_ops.decode_attention(

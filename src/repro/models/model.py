@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.flash_prefill import ops as prefill_ops
-from repro.models import layers, moe as moe_lib, ssm as ssm_lib
+from repro.models import kv_quant, layers, moe as moe_lib, ssm as ssm_lib
 from repro.models.layers import DTYPE, embed_init
 from repro.parallel import sharding
 
@@ -376,7 +376,13 @@ def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
 # ---------------------------------------------------------------------------
 
 def kv_store_dtype(cfg: ModelConfig):
-    """KV-cache storage dtype (bf16 default; f8 halves bytes/capacity)."""
+    """DENSE KV-cache storage dtype (bf16 default; f8 halves bytes).
+
+    The SCLAD values ("int8"/"fp8") only change the PAGED pool layout
+    (``init_paged_cache`` — compressed payload + scale leaves); dense
+    stripes (wave mode, hybrid/audio caches) keep the bf16 default under
+    them, so every family stays servable at any ``kv_dtype``.
+    """
     return jnp.float8_e4m3fn if cfg.kv_dtype == "f8" else DTYPE
 
 
@@ -431,13 +437,35 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
     ``prefill_slots`` address the pool through per-row block tables; writes
     must target blocks the store reports exclusive (the engine's
     copy-on-write barrier guarantees this — see ``copy_cache_block``).
+
+    With a SCLAD ``cfg.kv_dtype`` ("int8" / "fp8") the pool is stored
+    compressed: the k/v leaves hold the quantized payload and two extra
+    fp32 leaves ``k_scale`` / ``v_scale`` of shape (L, N, bs, Hk) hold the
+    per-position-per-head scales (``models.kv_quant``).  Every pool
+    reader/writer — ``layers.attention_decode``, ``prefill_slots``, the
+    flash kernels and their jnp references — carries the scale leaves
+    alongside the payload; block identity (hashing, sharing, COW, LRU) is
+    over the (payload, scale) pair as one unit.
     """
     fam = cfg.family
     if fam not in ("dense", "moe", "vlm"):
         raise NotImplementedError(
             f"paged KV caches cover the attention families, not {fam!r}")
-    KVD = kv_store_dtype(cfg)
     hk, hd, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    if kv_quant.is_quantized(cfg.kv_dtype):
+        KVD = kv_quant.payload_dtype(cfg.kv_dtype)
+        return {
+            "k": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
+            "v": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
+            # All-zero payload rows carry scale 1.0 by the quantizer's
+            # convention; zeros-init matches (0 * 1.0 == 0) but any init
+            # works — unwritten positions are masked by lengths.
+            "k_scale": jnp.ones((L, num_blocks, block_size, hk),
+                                jnp.float32),
+            "v_scale": jnp.ones((L, num_blocks, block_size, hk),
+                                jnp.float32),
+        }
+    KVD = kv_store_dtype(cfg)
     return {
         "k": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
         "v": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
@@ -457,9 +485,9 @@ def _copy_cache_block_fn():
     donate = (0,) if jax.default_backend() != "cpu" else ()
 
     def body(cache, src, dst):
-        return dict(cache,
-                    k=cache["k"].at[:, dst].set(cache["k"][:, src]),
-                    v=cache["v"].at[:, dst].set(cache["v"][:, src]))
+        # tree.map so the quantized layout's scale leaves ride along with
+        # the payload — a COW'd block is the (payload, scale) pair.
+        return jax.tree.map(lambda x: x.at[:, dst].set(x[:, src]), cache)
 
     return jax.jit(body, donate_argnums=donate)
 
@@ -577,19 +605,38 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
     real_key = (sidx[None] < prefix) | (sidx[None] >= prefix + pad[:, None])
     lengths = jnp.asarray(lengths, jnp.int32)
 
-    def body(x, blk_kv):
-        blk, kc, vc = blk_kv
-        q, k, v = _attn_qkv(cfg, blk, x, positions)
-        a, kc, vc = prefill_ops.prefill_attention(
-            q, k, v, kc, vc, lengths, block_tables,
-            start=None if first else start_v, prefix=prefix,
-            kernel=cfg.attn_kernel)
-        x, _ = _attn_post(cfg, blk, x, a, moe_valid=real_key)
-        return x, (kc, vc)
+    quantized = kv_quant.is_quantized(cfg.kv_dtype)
 
-    h, (ks, vs) = jax.lax.scan(
-        body, h, (params["blocks"], cache["k"], cache["v"]))
-    cache = dict(cache, k=ks, v=vs)
+    if quantized:
+        def body(x, blk_kv):
+            blk, kc, vc, ksc, vsc = blk_kv
+            q, k, v = _attn_qkv(cfg, blk, x, positions)
+            a, kc, vc, ksc, vsc = prefill_ops.prefill_attention(
+                q, k, v, kc, vc, lengths, block_tables,
+                start=None if first else start_v, prefix=prefix,
+                kernel=cfg.attn_kernel, kv_scales=(ksc, vsc),
+                kv_dtype=cfg.kv_dtype)
+            x, _ = _attn_post(cfg, blk, x, a, moe_valid=real_key)
+            return x, (kc, vc, ksc, vsc)
+
+        h, (ks, vs, kss, vss) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        cache = dict(cache, k=ks, v=vs, k_scale=kss, v_scale=vss)
+    else:
+        def body(x, blk_kv):
+            blk, kc, vc = blk_kv
+            q, k, v = _attn_qkv(cfg, blk, x, positions)
+            a, kc, vc = prefill_ops.prefill_attention(
+                q, k, v, kc, vc, lengths, block_tables,
+                start=None if first else start_v, prefix=prefix,
+                kernel=cfg.attn_kernel)
+            x, _ = _attn_post(cfg, blk, x, a, moe_valid=real_key)
+            return x, (kc, vc)
+
+        h, (ks, vs) = jax.lax.scan(
+            body, h, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs)
     # Left padding aligns every row's last REAL token at index S-1.
     logits = unembed(cfg, params, h[:, -1])
     return logits, cache
@@ -631,27 +678,46 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
 
     if fam in ("dense", "moe", "vlm"):
         pos = position + (cfg.num_patches if fam == "vlm" else 0)
+        quantized = block_tables is not None \
+            and kv_quant.is_quantized(cfg.kv_dtype)
 
-        def body(x, blk_kv):
-            blk, kc, vc = blk_kv
-            a, kc, vc = layers.attention_decode(
-                cfg, blk["attn"],
-                layers.apply_norm(cfg, blk["ln_attn"], x), kc, vc, pos,
-                block_tables=block_tables)
-            x = x + a
+        def ffn(x, blk):
             if fam == "moe":
                 y, _ = moe_lib.apply_moe(
                     cfg, blk["moe"], layers.apply_norm(cfg, blk["ln_mlp"], x),
                     valid=None if active is None else active[:, None])
-                x = x + y
-            else:
-                x = x + layers.apply_mlp(
-                    cfg, blk["mlp"], layers.apply_norm(cfg, blk["ln_mlp"], x))
-            return x, (kc, vc)
+                return x + y
+            return x + layers.apply_mlp(
+                cfg, blk["mlp"], layers.apply_norm(cfg, blk["ln_mlp"], x))
 
-        h, (k_new, v_new) = jax.lax.scan(
-            body, h, (params["blocks"], cache["k"], cache["v"]))
-        new_cache = {"k": k_new, "v": v_new}
+        if quantized:
+            def body(x, blk_kv):
+                blk, kc, vc, ksc, vsc = blk_kv
+                a, kc, vc, ksc, vsc = layers.attention_decode(
+                    cfg, blk["attn"],
+                    layers.apply_norm(cfg, blk["ln_attn"], x), kc, vc, pos,
+                    block_tables=block_tables, kv_scales=(ksc, vsc))
+                x = ffn(x + a, blk)
+                return x, (kc, vc, ksc, vsc)
+
+            h, (k_new, v_new, ks_new, vs_new) = jax.lax.scan(
+                body, h, (params["blocks"], cache["k"], cache["v"],
+                          cache["k_scale"], cache["v_scale"]))
+            new_cache = {"k": k_new, "v": v_new,
+                         "k_scale": ks_new, "v_scale": vs_new}
+        else:
+            def body(x, blk_kv):
+                blk, kc, vc = blk_kv
+                a, kc, vc = layers.attention_decode(
+                    cfg, blk["attn"],
+                    layers.apply_norm(cfg, blk["ln_attn"], x), kc, vc, pos,
+                    block_tables=block_tables)
+                x = ffn(x + a, blk)
+                return x, (kc, vc)
+
+            h, (k_new, v_new) = jax.lax.scan(
+                body, h, (params["blocks"], cache["k"], cache["v"]))
+            new_cache = {"k": k_new, "v": v_new}
     elif fam == "ssm":
         def body(x, blk_c):
             blk, c = blk_c

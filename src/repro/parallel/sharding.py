@@ -269,6 +269,10 @@ def cache_specs(cfg: ModelConfig, cache_shape, dp: Optional[Tuple[str, ...]],
                 return P(None, None, None, tp, None)
             # (L, B, S, Hk, hd): batch over dp, sequence over model.
             return P(None, dpa, tp, None, None)
+        if name in ("k_scale", "v_scale") and paged:
+            # SCLAD scale metadata (L, N, bs, Hk): co-sharded with the
+            # payload's KV-head axis so each shard dequantizes locally.
+            return P(None, None, None, tp)
         if name == "state":
             # (..., B, H, P, N): heads over model.
             return P(*([None] * (nd - 4)), dpa, tp, None, None)

@@ -81,6 +81,16 @@ Knobs (see also examples/quickstart.py):
   * ``preempt_policy`` — pool-pressure victim selection: "youngest"
     (default), "largest" (most blocks held) or "deadline" (latest
     ``submit(deadline=...)`` evicted first).
+  * ``kv_dtype`` — on-device KV pool representation.  "fp"/"bf16" store
+    dense compute-dtype blocks; "int8"/"fp8" store the SCLAD compressed
+    pool (``models.kv_quant``: int8 / float8_e4m3fn payload + per-
+    position-per-head fp32 scales) — every reader dequantizes on load,
+    so a fixed device byte budget holds ~2x the token context.  The
+    prefix-cache hash chain is namespaced per encoding
+    (``paged.chain_root_for``), so pools with different kv_dtype
+    settings can never false-share blocks.  Composes with
+    ``attn_kernel``: both the jnp references and the Pallas kernels
+    fuse the dequant into their block-streaming loops.
 
 vlm note: the patch prefix is part of each lane's cache, so its positions
 enter the hash chain as sentinel ids and the PATCH-EMBEDDING DIGEST seeds
@@ -114,10 +124,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.kernels.flash_prefill.ops import ATTN_KERNEL_MODES
+from repro.models import kv_quant
 from repro.models import model as M
 from repro.parallel import sharding
 from repro.serving.paged import (BlockStore, CHAIN_ROOT, OutOfBlocks,
-                                 TRASH_BLOCK, chain_hashes)
+                                 TRASH_BLOCK, chain_hashes, chain_root_for)
 from repro.serving.sampler import SamplerConfig, sample
 
 # Families whose KV cache supports block-level admission (see module doc).
@@ -179,6 +190,15 @@ class EngineStats:
     decode_steps: int = 0
     admissions: int = 0
     preemptions: int = 0
+    # Concurrency capacity (continuous mode): peak simultaneously DECODING
+    # lanes — requests that finished prefill and hold every block they
+    # need.  Admission is optimistic (lanes fill before blocks are
+    # consumed), so under pool pressure this — not admissions — is what
+    # the pool caps: preemption evicts the overflow during the prefill
+    # storm and the survivors decode together.  The SCLAD capacity claim
+    # is exactly this number at a fixed pool byte budget — a compressed
+    # pool affords more blocks, so more lanes sustain concurrently.
+    peak_decode_lanes: int = 0
     # Time-to-first-token (submit -> first generated token observed at a
     # host sync), summed over finished-first-token requests.  The paged
     # flash-prefill work prices exactly this: TTFT is the prefill-side
@@ -268,7 +288,8 @@ class ServingEngine:
                  decode_steps: int = 1,
                  attn_kernel: Optional[str] = None,
                  decode_kernel: Optional[str] = None,
-                 preempt_policy: str = "youngest"):
+                 preempt_policy: str = "youngest",
+                 kv_dtype: Optional[str] = None):
         """mode: "auto" (continuous where the family supports it),
         "continuous" (error if unsupported) or "wave" (force the legacy
         lockstep baseline).
@@ -290,6 +311,14 @@ class ServingEngine:
         "largest" (most KV blocks held: frees the most memory per
         eviction) or "deadline" (latest ``submit(deadline=...)`` first;
         requests without a deadline are evicted before any with one).
+
+        kv_dtype: overrides ``cfg.kv_dtype`` — the paged pool's on-device
+        representation: "fp"/"bf16" (dense compute-dtype blocks, the
+        default), "f8" (dense float8 stripes, legacy), or the SCLAD
+        compressed encodings "int8"/"fp8" (payload + per-position fp32
+        scales; ~2x token context per device byte, dequantized on load
+        by references and kernels alike).  None keeps the config's
+        setting.  See the module docstring.
         """
         if decode_steps < 1:
             raise ValueError("decode_steps must be >= 1")
@@ -313,6 +342,14 @@ class ServingEngine:
                     f"attn_kernel (nee decode_kernel) {attn_kernel!r} not "
                     f"in {ATTN_KERNEL_MODES}")
             cfg = dc_replace(cfg, attn_kernel=attn_kernel)
+        if kv_dtype is not None:
+            if kv_dtype not in kv_quant.KV_DTYPES:
+                raise ValueError(
+                    f"kv_dtype {kv_dtype!r} not in {kv_quant.KV_DTYPES}")
+            cfg = dc_replace(cfg, kv_dtype=kv_dtype)
+        #: Prefix-cache chain root, namespaced by the pool encoding so an
+        #: int8 pool can never revive/share blocks hashed for an fp pool.
+        self._chain_root = chain_root_for(cfg.kv_dtype)
         self.preempt_policy = preempt_policy
         self.cfg = cfg
         self.max_batch = max_batch
@@ -438,13 +475,17 @@ class ServingEngine:
         determined by token ids -> the global root; vlm K/V additionally
         depends on the image, so the patch embeddings' digest is folded in
         (the None zero-stub gets its own constant seed, preserving
-        stub-to-stub sharing)."""
+        stub-to-stub sharing).  All digests grow from the engine's
+        kv_dtype-namespaced chain root: quantized pools store DIFFERENT
+        bytes for the same token ids, so their content addresses must
+        never collide with an fp pool's."""
         if self.cfg.family != "vlm":
-            return CHAIN_ROOT
+            return self._chain_root
         if patch_embeds is None:
-            return hashlib.sha256(CHAIN_ROOT + b"|vlm-zero-stub").digest()
+            return hashlib.sha256(
+                self._chain_root + b"|vlm-zero-stub").digest()
         return hashlib.sha256(
-            CHAIN_ROOT + patch_embeds.tobytes()).digest()
+            self._chain_root + patch_embeds.tobytes()).digest()
 
     def step(self) -> List[Tuple[int, List[int]]]:
         """One scheduler iteration: admit queued requests onto free lanes
@@ -495,6 +536,8 @@ class ServingEngine:
         self.stats.decode_s += time.perf_counter() - t0
 
         was = self._host_active.copy()
+        self.stats.peak_decode_lanes = max(self.stats.peak_decode_lanes,
+                                           int(was.sum()))
         self.stats.decode_steps += K
         self.stats.slot_steps += self.max_batch * K
         self.stats.used_token_steps += self._alloc.live_tokens * K
@@ -558,15 +601,20 @@ class ServingEngine:
         if self.num_blocks is None:
             self.num_blocks = B * table_width
         self._alloc = BlockStore(self.num_blocks, bs, B, table_width,
-                                 prefix_cache=self.prefix_cache)
+                                 prefix_cache=self.prefix_cache,
+                                 kv_dtype=cfg.kv_dtype)
         # +1 device block: id 0 is the dead-lane trash sink.
         self._cache = M.init_paged_cache(cfg, self.num_blocks + 1, bs)
         if self._mesh is not None:
             self._cache = self._place_cache(self._mesh, self._cache)
-        # Device bytes per pool block, all layers, K+V (axis 1 is blocks).
+        # Device bytes per pool block, all layers, K+V, summed over EVERY
+        # cache leaf (axis 1 is blocks for payload and scale leaves
+        # alike) — so a quantized pool's number is the true compressed
+        # footprint: int8/fp8 payload bytes PLUS the fp32 scale metadata,
+        # not a dense-equivalent estimate.
         self.kv_block_bytes = sum(
             int(np.prod(x.shape)) // x.shape[1] * x.dtype.itemsize
-            for x in (self._cache["k"], self._cache["v"]))
+            for x in self._cache.values())
         ldtype = self.params["embed"].dtype
         self._logits = jnp.zeros((B, cfg.vocab_size), ldtype)
         self._pos = jnp.zeros((B,), jnp.int32)

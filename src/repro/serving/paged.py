@@ -69,6 +69,23 @@ CHAIN_ROOT = b"kv-chain-root"
 _CHAIN_ROOT = CHAIN_ROOT  # back-compat alias
 
 
+def chain_root_for(kv_dtype: str = "fp") -> bytes:
+    """The store's chain-root seed for a given pool representation.
+
+    A block's compressed payload is a pure function of (token ids, chain
+    root, kv_dtype) — the SCLAD quantizers are path-independent — so the
+    kv_dtype must be part of the content address: two stores serving the
+    same tokens under different ``kv_dtype`` hold different pool bytes and
+    must never hash-match each other's blocks (e.g. through a snapshot or
+    a shared host-side index).  fp-family spellings ("fp"/"bf16"/"f8")
+    keep the historic root so existing digests stay valid.
+    """
+    if kv_dtype in ("int8", "fp8"):
+        return hashlib.sha256(
+            CHAIN_ROOT + b"|kv:" + kv_dtype.encode()).digest()
+    return CHAIN_ROOT
+
+
 def chain_hashes(content: Sequence[int], block_size: int,
                  prefix: Sequence[bytes] = (),
                  seed: bytes = CHAIN_ROOT) -> List[bytes]:
@@ -113,10 +130,16 @@ class BlockStore:
     prefix_cache: when False, no hashing/registration happens — the store
         degenerates to the plain lazy allocator (every block exclusive,
         released blocks go straight back to the free list).
+    kv_dtype: the device pool's representation ("fp" family or the SCLAD
+        "int8"/"fp8" compressed layouts).  Only used to derive the store's
+        default chain root (``chain_root_for``): quantized pools hold
+        different bytes per token than fp pools, so their content hashes
+        live in a disjoint namespace and can never cross-match.
     """
 
     def __init__(self, num_blocks: int, block_size: int, num_slots: int,
-                 max_blocks_per_slot: int, prefix_cache: bool = True):
+                 max_blocks_per_slot: int, prefix_cache: bool = True,
+                 kv_dtype: str = "fp"):
         if num_blocks < 1 or block_size < 1:
             raise ValueError("num_blocks and block_size must be >= 1")
         self.num_blocks = num_blocks
@@ -124,6 +147,8 @@ class BlockStore:
         self.num_slots = num_slots
         self.max_blocks_per_slot = max_blocks_per_slot
         self.prefix_cache = prefix_cache
+        self.kv_dtype = kv_dtype
+        self.chain_root = chain_root_for(kv_dtype)
         # LIFO free list: recently-freed blocks are reused first, which keeps
         # the working set of device pages small.
         self._free: List[int] = list(range(num_blocks, 0, -1))
@@ -197,7 +222,7 @@ class BlockStore:
     def match_prefix(self, content: Sequence[int],
                      max_cached_tokens: Optional[int] = None,
                      min_cached_tokens: int = 0,
-                     seed: bytes = CHAIN_ROOT) -> int:
+                     seed: Optional[bytes] = None) -> int:
         """Number of leading FULL blocks of ``content`` resident in the
         store (live or pooled), after the caps admission applies:
 
@@ -210,6 +235,7 @@ class BlockStore:
         """
         if not self.prefix_cache:
             return 0
+        seed = self.chain_root if seed is None else seed
         return self._match(chain_hashes(content, self.block_size, seed=seed),
                            max_cached_tokens, min_cached_tokens)
 
@@ -247,7 +273,7 @@ class BlockStore:
               max_cached_tokens: Optional[int] = None,
               min_cached_tokens: int = 0,
               digests: Optional[Sequence[bytes]] = None,
-              seed: bytes = CHAIN_ROOT) -> int:
+              seed: Optional[bytes] = None) -> int:
         """Open a lane; start it with every cached prefix block of
         ``content`` (token ids, from cache position 0).  Takes a reference
         on each matched block — pooled blocks are revived, live ones are
@@ -268,6 +294,7 @@ class BlockStore:
         """
         if slot in self._blocks:
             raise ValueError(f"slot {slot} already admitted")
+        seed = self.chain_root if seed is None else seed
         self._blocks[slot] = []
         self._len[slot] = 0
         self._chain[slot] = []

@@ -314,6 +314,127 @@ def test_paged_flash_prefill_chunk_sweep(bs, P):
 
 
 # ---------------------------------------------------------------------------
+# SCLAD quantized KV pools (int8/fp8 payload + per-position fp32 scales)
+# ---------------------------------------------------------------------------
+
+def _quantize_pool(kp, vp, kv_dtype):
+    """Compress a dense (N, bs, Hk, D) pool the way the engine stores it:
+    per-position-per-head payload + fp32 scales (``models.kv_quant``)."""
+    from repro.models import kv_quant
+    kq, ks = kv_quant.quantize(kp, kv_dtype)
+    vq, vs = kv_quant.quantize(vp, kv_dtype)
+    return kq, vq, ks, vs
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_decode_quantized(kv_dtype, dtype):
+    """The fused dequant (payload * scale streamed through the table walk)
+    against the gather-then-dequantize oracle."""
+    B, H, Hk, D, bs, T = 3, 8, 2, 64, 8, 4
+    lengths = np.asarray([T * bs, 1, 13], np.int32)
+    k_pool, v_pool, tables = _build_pool(31, B, Hk, D, bs, T, lengths,
+                                         jnp.float32)
+    kq, vq, ks, vs = _quantize_pool(k_pool, v_pool, kv_dtype)
+    q = jax.random.normal(jax.random.PRNGKey(37), (B, H, D)).astype(dtype)
+    out = paged_flash_decode(q, kq, vq, jnp.asarray(lengths), tables,
+                             kv_scales=(ks, vs), interpret=True)
+    ref = paged_decode_ref(q, kq, vq, jnp.asarray(lengths), tables,
+                           kv_scales=(ks, vs))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+
+
+def _check_prefill_parity_quantized(case, prefix, dtype, kv_dtype):
+    """Kernel-vs-reference on a SCLAD pool: attention within tolerance,
+    payload POOLS AND SCALES bitwise equal (the in-kernel quantize must
+    reproduce ``kv_quant.quantize`` operation-for-operation, and aliasing
+    must leave unwritten blocks' payload/scales untouched)."""
+    q, kn, vn, kp, vp, lengths, tables, st = case
+    B = q.shape[0]
+    kq, vq, ks, vs = _quantize_pool(kp.astype(jnp.float32),
+                                    vp.astype(jnp.float32), kv_dtype)
+    ro, rk, rv, rks, rvs = prefill_attention_ref(
+        q, kn, vn, kq, vq, lengths, tables, start=st, prefix=prefix,
+        kv_scales=(ks, vs), kv_dtype=kv_dtype)
+    sv = jnp.zeros((B,), jnp.int32) if st is None else st
+    ko, kk, kv, kks, kvs = paged_flash_prefill(
+        q, kn, vn, kq, vq, lengths, tables, sv, prefix=prefix,
+        has_ctx=st is not None, interpret=True, kv_scales=(ks, vs),
+        kv_dtype=kv_dtype)
+    np.testing.assert_allclose(
+        np.asarray(ko, np.float32), np.asarray(ro, np.float32),
+        atol=tol(dtype), rtol=tol(dtype))
+    np.testing.assert_array_equal(np.asarray(kk), np.asarray(rk))
+    np.testing.assert_array_equal(np.asarray(kv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(kks), np.asarray(rks))
+    np.testing.assert_array_equal(np.asarray(kvs), np.asarray(rvs))
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_flash_prefill_quantized_continuation(kv_dtype, dtype):
+    """Continuation chunks on a quantized pool: fused context dequant +
+    in-kernel quantized scatter vs the host-side reference."""
+    B, H, Hk, D, bs, T, P = 3, 8, 2, 64, 8, 4, 8
+    rng = np.random.default_rng(41)
+    cap = (T - 1) * bs
+    starts = [bs] + [1 + int(rng.integers(0, max(cap - P, 1)))
+                     for _ in range(B - 1)]
+    lengths = [P] + [int(rng.integers(1, P + 1)) for _ in range(B - 1)]
+    case = _build_prefill_case(43, B, H, Hk, D, bs, T, 0, P, starts,
+                               lengths, dtype)
+    _check_prefill_parity_quantized(case, 0, dtype, kv_dtype)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+@pytest.mark.parametrize("prefix", [0, 4])
+def test_paged_flash_prefill_quantized_first_chunk(kv_dtype, prefix):
+    """First chunks (vlm patch prefix included) quantize every written
+    position; untouched blocks keep their (garbage) payload and scales."""
+    B, H, Hk, D, bs, T, P = 3, 4, 2, 32, 4, 6, 8
+    case = _build_prefill_case(47, B, H, Hk, D, bs, T, prefix, P, None,
+                               [8, 3, 5], jnp.bfloat16)
+    _check_prefill_parity_quantized(case, prefix, jnp.bfloat16, kv_dtype)
+
+
+def test_quantized_scatter_path_independent():
+    """The SAME tokens written as one 8-token chunk or as two 4-token
+    chunks leave BITWISE identical payload and scales in the pool — the
+    property that makes the hash chain a sound content address for
+    compressed blocks (and preemption recompute safe)."""
+    B, H, Hk, D, bs, T, P = 1, 4, 2, 32, 4, 4, 8
+    case = _build_prefill_case(53, B, H, Hk, D, bs, T, 0, P, [4],
+                               [P], jnp.bfloat16)
+    q, kn, vn, kp, vp, lengths, tables, st = case
+    kq, vq, ks, vs = _quantize_pool(kp.astype(jnp.float32),
+                                    vp.astype(jnp.float32), "int8")
+    _, k1, v1, ks1, vs1 = prefill_attention_ref(
+        q, kn, vn, kq, vq, lengths, tables, start=st,
+        kv_scales=(ks, vs), kv_dtype="int8")
+    # Same tokens, two half chunks (left-padded to the same width P).
+    half = P // 2
+    pools = (kq, vq, ks, vs)
+    for c in range(2):
+        pad = jnp.zeros((B, half) + kn.shape[2:], kn.dtype)
+        sl = slice(c * half, (c + 1) * half)
+        qc = jnp.concatenate(
+            [jnp.zeros((B, half) + q.shape[2:], q.dtype), q[:, sl]], axis=1)
+        knc = jnp.concatenate([pad, kn[:, sl]], axis=1)
+        vnc = jnp.concatenate([pad, vn[:, sl]], axis=1)
+        _, *pools = prefill_attention_ref(
+            qc, knc, vnc, pools[0], pools[1],
+            jnp.full((B,), half, jnp.int32), tables,
+            start=st + c * half, kv_scales=(pools[2], pools[3]),
+            kv_dtype="int8")
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(pools[0]))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(pools[1]))
+    np.testing.assert_array_equal(np.asarray(ks1), np.asarray(pools[2]))
+    np.testing.assert_array_equal(np.asarray(vs1), np.asarray(pools[3]))
+
+
+# ---------------------------------------------------------------------------
 # SCLD matmul
 # ---------------------------------------------------------------------------
 

@@ -15,8 +15,8 @@ sweeps of the same invariants live in test_paged_kv_properties.py):
 import numpy as np
 import pytest
 
-from repro.serving.paged import (BlockStore, OutOfBlocks, TRASH_BLOCK,
-                                 chain_hashes)
+from repro.serving.paged import (BlockStore, CHAIN_ROOT, OutOfBlocks,
+                                 TRASH_BLOCK, chain_hashes, chain_root_for)
 
 
 def test_prefix_sharing_and_cow_isolation():
@@ -196,3 +196,54 @@ def test_chain_hash_commits_to_whole_prefix():
     b = chain_hashes([9, 9, 3, 4], 2)
     assert a[1] != b[1]
     assert chain_hashes([1, 2, 3], 2) == a[:1]  # partial tail: no digest
+
+
+def test_chain_root_namespaced_by_kv_dtype():
+    """The pool encoding is part of the content address: quantized stores
+    hash from a kv_dtype-derived root; fp-family spellings keep the
+    historic root so existing digests stay valid."""
+    assert chain_root_for("fp") == CHAIN_ROOT
+    assert chain_root_for("bf16") == CHAIN_ROOT
+    assert chain_root_for("f8") == CHAIN_ROOT
+    roots = {chain_root_for(d) for d in ("fp", "int8", "fp8")}
+    assert len(roots) == 3
+    content = [1, 2, 3, 4]
+    fp = chain_hashes(content, 2)
+    i8 = chain_hashes(content, 2, seed=chain_root_for("int8"))
+    f8 = chain_hashes(content, 2, seed=chain_root_for("fp8"))
+    assert fp[0] != i8[0] and fp[0] != f8[0] and i8[0] != f8[0]
+
+
+def test_quantized_store_shares_within_not_across_encoding():
+    """An int8 store's lanes share prefix blocks exactly as an fp store's
+    do — but digests hashed under a DIFFERENT kv_dtype root never match
+    its registrations (an int8 block's payload bytes are not the fp
+    block's, so cross-encoding revival would serve wrong KV)."""
+    bs, nb = 2, 3
+    n = nb * bs
+    content = list(np.arange(1, n + 1))
+    store = BlockStore(num_blocks=4 * nb + 2, block_size=bs, num_slots=2,
+                      max_blocks_per_slot=nb + 2, kv_dtype="int8")
+    assert store.chain_root == chain_root_for("int8")
+    assert store.admit(0, content) == 0
+    store.grow(0, n)
+    store.commit_full(0, content)
+    # Intra-encoding sharing is untouched: a second int8 lane hits fully.
+    assert store.admit(1, content) == n
+    assert store.hit_blocks == nb
+    store.check_invariants()
+    # Digests hashed under the fp root (or another quantized root) find
+    # nothing in the int8 store's index.
+    for other in (CHAIN_ROOT, chain_root_for("fp8")):
+        foreign = chain_hashes(content, bs, seed=other)
+        assert store.match_digests(foreign) == (0, 0)
+    # Symmetric: an fp store never serves int8-rooted digests.
+    fp_store = BlockStore(num_blocks=4 * nb + 2, block_size=bs, num_slots=2,
+                          max_blocks_per_slot=nb + 2)
+    assert fp_store.chain_root == CHAIN_ROOT
+    fp_store.admit(0, content)
+    fp_store.grow(0, n)
+    fp_store.commit_full(0, content)
+    i8_digests = chain_hashes(content, bs, seed=chain_root_for("int8"))
+    assert fp_store.match_digests(i8_digests) == (0, 0)
+    assert fp_store.match_prefix(content) == nb  # same-root control

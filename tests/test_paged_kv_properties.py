@@ -15,7 +15,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.serving.paged import BlockStore, OutOfBlocks, TRASH_BLOCK
+from repro.serving.paged import (BlockStore, OutOfBlocks, TRASH_BLOCK,
+                                 chain_hashes, chain_root_for)
 
 
 def _shared_prefix_sound(store, contents):
@@ -119,3 +120,30 @@ def test_random_traces_preserve_invariants(data):
         store.check_invariants()
         _shared_prefix_sound(store, contents)
         assert store.available == store.num_blocks - store.live_blocks
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_no_false_sharing_across_kv_dtypes(data):
+    """For ANY content, digests hashed under one pool encoding's chain
+    root never match a store built for another encoding: an int8 block's
+    compressed payload is not the fp block's bytes, so cross-encoding
+    hash hits would revive wrong KV.  Same-encoding matching must keep
+    working (the control)."""
+    bs = data.draw(st.integers(1, 4), label="block_size")
+    n_blocks = data.draw(st.integers(1, 4), label="n_full_blocks")
+    n = n_blocks * bs
+    content = data.draw(st.lists(st.integers(0, 3), min_size=n, max_size=n),
+                        label="content")
+    own, other = data.draw(st.sampled_from(
+        [("fp", "int8"), ("int8", "fp"), ("int8", "fp8"), ("fp8", "int8")]),
+        label="encodings")
+    store = BlockStore(num_blocks=n_blocks + 1, block_size=bs, num_slots=2,
+                       max_blocks_per_slot=n_blocks + 1, kv_dtype=own)
+    store.admit(0, content)
+    store.grow(0, n)
+    store.commit_full(0, content)
+    foreign = chain_hashes(content, bs, seed=chain_root_for(other))
+    assert store.match_digests(foreign) == (0, 0)
+    native = chain_hashes(content, bs, seed=chain_root_for(own))
+    assert store.match_digests(native)[0] == n_blocks
