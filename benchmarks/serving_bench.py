@@ -47,6 +47,24 @@ CPU config:
    both implementations so the prefill-side trajectory is visible next
    to the decode numbers.
 
+6. OPEN-LOOP probes (the service posture of the paper's cloud-scale
+   premise): Poisson arrivals through ``serving.frontend.AsyncFrontend``
+   — requests arrive on a clock that does not wait for the scheduler and
+   stream their tokens back, so the report is CLIENT-side tail latency
+   (p50/p99 TTFT including admission queueing, p50/p99 inter-token gap)
+   and goodput-under-SLO, next to reject/shed counts.  Two rates:
+     * ``moderate`` — an arrival rate the engine absorbs: breaker stays
+       closed, nothing shed, and every completed stream is asserted
+       bit-identical to the same requests through closed-loop
+       ``engine.run()`` (the frontend adds admission, not arithmetic);
+     * ``saturating`` — a deliberate overload burst against a tight pool
+       (optimistic admission preempts, pool saturates) followed by a
+       late tail: the breaker must OPEN during the burst and SHED tail
+       arrivals, while the requests it did admit still finish
+       bit-identical to ``run()``.  (The full closed->open->half_open->
+       closed recovery walk is pinned in tests/test_frontend.py; here
+       the artifact records opens/sheds/transitions.)
+
 Reported: decode tokens/s, prefill tokens/s, mean TTFT, lane occupancy,
 mean concurrent requests, KV token utilization (can exceed 1.0 under
 sharing — lanes serve more context than the pool stores), prefix hit-rate
@@ -82,6 +100,8 @@ from repro.configs.base import get_config
 from repro.models import kv_quant
 from repro.models import model as M
 from repro.serving.engine import EngineStats, ServingEngine
+from repro.serving.frontend import CircuitBreaker
+from repro.serving.openloop import TraceItem, poisson_trace, run_open_loop
 
 ARCH = "tinyllama-1.1b"
 MAX_LEN = 64
@@ -154,6 +174,136 @@ def _pool_block_bytes(cfg, block_size):
     cache = M.init_paged_cache(cfg, 1, block_size)
     return sum(int(np.prod(x.shape)) * x.dtype.itemsize
                for x in cache.values())
+
+
+def _open_loop_section(cfg, params, trace, engine_kwargs, breaker,
+                       max_queue_depth, slo_ttft_s):
+    """One open-loop run + the closed-loop bit-identity cross-check.
+
+    The engine is warmed closed-loop FOR EVERY ADMISSION GROUP SIZE
+    first: prefill retraces per (group size, chunk bucket), and unlike
+    the closed-loop sections an open-loop arrival process admits in
+    groups of any size from 1 up to max_batch depending on timing — a
+    group size first seen mid-run would stall a scheduler tick on a
+    multi-second XLA compile and wreck both the latency distribution and
+    the breaker's tick clock.  Traces here keep every prompt (and every
+    preemption-recompute prompt) inside ONE chunk bucket, so warming
+    g=1..max_batch covers the whole retrace space.  Completed streams
+    are then asserted bit-identical to a fresh engine's ``run()`` over
+    the same (prompt, budget) set — the frontend must add admission
+    control, never arithmetic.
+    """
+    eng = ServingEngine(cfg, params, max_len=MAX_LEN, eos_id=-1,
+                        **engine_kwargs)
+    wrng = np.random.default_rng(99)
+    for g in range(1, engine_kwargs.get("max_batch", 4) + 1):
+        for _ in range(g):
+            eng.submit(wrng.integers(1, cfg.vocab_size, size=12),
+                       max_new_tokens=2)
+        eng.run()
+    eng.stats = EngineStats()
+    report = run_open_loop(eng, trace, max_queue_depth=max_queue_depth,
+                           breaker=breaker)
+    # Bit-identity on the non-shed requests vs the in-process run() path.
+    ref = ServingEngine(cfg, params, max_len=MAX_LEN, eos_id=-1,
+                        **engine_kwargs)
+    completed = [(it, rec) for it, rec in zip(trace, report.records)
+                 if rec.status == "completed"]
+    uids = [ref.submit(it.prompt, max_new_tokens=it.max_new_tokens)
+            for it, _ in completed]
+    ref_out = ref.run()
+    for uid, (it, rec) in zip(uids, completed):
+        assert rec.tokens == ref_out[uid], (
+            "open-loop stream diverged from closed-loop run() greedy")
+    summary = report.summary(slo_ttft_s)
+    summary["bit_identical_to_run"] = True
+    summary["engine"] = {
+        "p50_ttft_s": eng.stats.p50_ttft_s,
+        "p99_ttft_s": eng.stats.p99_ttft_s,
+        "p50_itl_s": eng.stats.p50_itl_s,
+        "p99_itl_s": eng.stats.p99_itl_s,
+        "preemptions": eng.stats.preemptions,
+        "cancellations": eng.stats.cancellations,
+    }
+    return report, summary
+
+
+# Dotted required paths for the BENCH_serving.json artifact, checked
+# before every write (and unit-pinned in tests/test_latency_stats.py) so
+# a malformed artifact fails the bench instead of uploading silently.
+# bool is checked exactly (bool is an int subclass — (int, float) would
+# wave booleans through as numbers).
+_NUM = (int, float)
+BENCH_SCHEMA = [
+    ("smoke", bool), ("arch", str), ("max_len", int), ("kv_dtype", str),
+    ("decode_tokens_per_s", dict), ("prefill_tokens_per_s", dict),
+    ("mean_ttft_s", dict), ("mean_active_requests", dict),
+    ("prefix_cache.hit_rate", _NUM),
+    ("prefix_cache.concurrency_vs_off_x", _NUM),
+    ("preemption.tight_pool_preemptions", int),
+    ("sclad.concurrency_vs_fp_x", _NUM),
+    ("sclad.greedy_identical_to_fp", bool),
+    ("attn_kernel.on_tokens_per_s", _NUM),
+    ("attn_kernel.off_tokens_per_s", _NUM),
+    ("open_loop.moderate.requests", int),
+    ("open_loop.moderate.completed", int),
+    ("open_loop.moderate.rejected_backpressure", int),
+    ("open_loop.moderate.shed_breaker", int),
+    ("open_loop.moderate.client_p50_ttft_s", _NUM),
+    ("open_loop.moderate.client_p99_ttft_s", _NUM),
+    ("open_loop.moderate.client_p50_itl_s", _NUM),
+    ("open_loop.moderate.client_p99_itl_s", _NUM),
+    ("open_loop.moderate.goodput.slo_ttft_s", _NUM),
+    ("open_loop.moderate.goodput.goodput_req_s", _NUM),
+    ("open_loop.moderate.goodput.goodput_tok_s", _NUM),
+    ("open_loop.moderate.breaker.opens", int),
+    ("open_loop.moderate.breaker.shed", int),
+    ("open_loop.moderate.breaker.final_state", str),
+    ("open_loop.moderate.bit_identical_to_run", bool),
+    ("open_loop.moderate.engine.p99_ttft_s", _NUM),
+    ("open_loop.moderate.engine.p99_itl_s", _NUM),
+    ("open_loop.saturating.requests", int),
+    ("open_loop.saturating.completed", int),
+    ("open_loop.saturating.shed_breaker", int),
+    ("open_loop.saturating.client_p99_ttft_s", _NUM),
+    ("open_loop.saturating.goodput.goodput_req_s", _NUM),
+    ("open_loop.saturating.breaker.opens", int),
+    ("open_loop.saturating.breaker.shed", int),
+    ("open_loop.saturating.breaker.transitions", list),
+    ("open_loop.saturating.bit_identical_to_run", bool),
+]
+
+
+def validate_bench(bench: dict) -> None:
+    """Structural gate on the artifact: every schema path must exist and
+    hold the right type, and every number must be finite and >= 0 (a NaN
+    percentile is a bug upstream, not a value to archive).  Raises
+    ``ValueError`` listing ALL problems."""
+    problems = []
+    missing = object()
+    for path, typ in BENCH_SCHEMA:
+        node = bench
+        for key in path.split("."):
+            if not isinstance(node, dict) or key not in node:
+                node = missing
+                break
+            node = node[key]
+        if node is missing:
+            problems.append(f"missing: {path}")
+            continue
+        if typ is bool or typ is int:
+            ok = isinstance(node, typ) and not (
+                typ is int and isinstance(node, bool))
+        else:
+            ok = isinstance(node, typ) and not isinstance(node, bool)
+        if not ok:
+            problems.append(f"wrong type: {path} = {node!r} (want {typ})")
+        elif isinstance(node, _NUM) and not isinstance(node, bool):
+            if not np.isfinite(node) or node < 0:
+                problems.append(f"non-finite/negative: {path} = {node!r}")
+    if problems:
+        raise ValueError("BENCH_serving.json schema violations:\n  "
+                         + "\n  ".join(problems))
 
 
 def run(smoke: bool = False, json_path: str | None = None,
@@ -321,6 +471,76 @@ def run(smoke: bool = False, json_path: str | None = None,
                  f"prefix_invariant_under_kernel=True "
                  f"peak_pool_bytes={s_kon.peak_pool_bytes}"))
 
+    # -- 6. open-loop probes: Poisson arrivals through the async frontend ----
+    # Moderate rate, ample pool: the engine absorbs the offered load —
+    # breaker closed, nothing rejected or shed, goodput == completion
+    # rate.  (Rates are request clocks, not token clocks: CPU interpret-
+    # mode tok/s is slow, so the SLO is generous — the artifact's value
+    # is the DISTRIBUTION shape and the admission counts, not absolute
+    # milliseconds.)
+    ol_n = 6 if smoke else 12
+    ol_kwargs = dict(mode="continuous", max_batch=4, block_size=8,
+                     num_blocks=48, prefill_chunk=16, **q)
+    # Prompt lengths pinned to (9, 16): every take pads to the SAME
+    # 16-wide chunk bucket, so the group-size warmup in
+    # _open_loop_section covers every retrace (see its docstring).
+    mod_trace = poisson_trace(
+        np.random.default_rng(6), ol_n, rate_req_s=4.0,
+        vocab=cfg.vocab_size, prompt_len=(9, 16), budget=(3, 6))
+    mod_breaker = CircuitBreaker(window=16, trip_pressure=4,
+                                 sat_threshold=1.0, cooldown_ticks=8)
+    _, mod = _open_loop_section(cfg, params, mod_trace, ol_kwargs,
+                                mod_breaker, max_queue_depth=ol_n,
+                                slo_ttft_s=30.0)
+    assert mod["breaker"]["opens"] == 0, (
+        "moderate open-loop rate should not trip the breaker")
+    assert mod["completed"] == ol_n, (
+        f"moderate rate should complete everything "
+        f"({mod['completed']}/{ol_n})")
+    rows.append(("serving/open_loop/moderate", 0.0,
+                 f"completed={mod['completed']}/{ol_n} "
+                 f"p99_ttft={mod['client_p99_ttft_s'] * 1e3:.0f}ms "
+                 f"p99_itl={mod['client_p99_itl_s'] * 1e3:.0f}ms "
+                 f"goodput={mod['goodput']['goodput_req_s']:.2f}req/s"))
+
+    # Saturating: an arrival burst against a TIGHT pool (optimistic
+    # admission preempts, saturation pins at 1.0) trips the breaker
+    # open during the burst; a tail arriving 0.8s later meets an open or
+    # half-open breaker — at most `probes` of it admitted, the rest shed.
+    # The tail cannot close the breaker early: closing needs a completed
+    # probe, and no probes exist before the tail arrives.
+    # Prompt 9-12 + budget 4 keeps even a preemption-recompute prompt
+    # (prompt + generated tokens) at <= 16 — one chunk bucket, warmed.
+    rng6 = np.random.default_rng(7)
+    burst = [TraceItem(arrival_s=float(i) * 1e-3,
+                       prompt=rng6.integers(1, cfg.vocab_size,
+                                            size=int(rng6.integers(9, 13))),
+                       max_new_tokens=4)
+             for i in range(8)]
+    tail = [TraceItem(arrival_s=0.8 + float(i) * 1e-3,
+                      prompt=rng6.integers(1, cfg.vocab_size,
+                                           size=int(rng6.integers(9, 13))),
+                      max_new_tokens=4)
+            for i in range(4)]
+    sat_kwargs = dict(ol_kwargs, max_batch=4, num_blocks=6)
+    sat_breaker = CircuitBreaker(window=8, trip_pressure=2,
+                                 sat_threshold=0.9, cooldown_ticks=12,
+                                 probes=1)
+    sat_report, sat = _open_loop_section(
+        cfg, params, burst + tail, sat_kwargs, sat_breaker,
+        max_queue_depth=16, slo_ttft_s=30.0)
+    assert sat["breaker"]["opens"] >= 1, (
+        "saturating burst must trip the breaker open")
+    assert sat["shed_breaker"] >= 1, (
+        "tail arrivals behind an open breaker must be shed")
+    rows.append(("serving/open_loop/saturating", 0.0,
+                 f"completed={sat['completed']}/{len(burst) + len(tail)} "
+                 f"shed={sat['shed_breaker']} "
+                 f"rejected={sat['rejected_backpressure']} "
+                 f"breaker_opens={sat['breaker']['opens']} "
+                 f"final={sat['breaker']['final_state']} "
+                 f"bit_identical=True"))
+
     # -- machine-readable summary (CI artifact) ------------------------------
     bench.update({
         "decode_tokens_per_s": {m: stats[m].tokens_per_s for m in stats},
@@ -389,7 +609,13 @@ def run(smoke: bool = False, json_path: str | None = None,
             "kv_block_bytes": s_kon.kv_block_bytes,
             "note": "deprecated alias of attn_kernel",
         },
+        # Open-loop service posture: client-side latency distributions,
+        # goodput-under-SLO, and the admission-control counters.
+        "open_loop": {"moderate": mod, "saturating": sat},
     })
+    # Structural gate before the artifact leaves the process: CI uploads
+    # whatever lands in --json, so a malformed dict must fail HERE.
+    validate_bench(bench)
     if json_path:
         with open(json_path, "w") as f:
             json.dump(bench, f, indent=2, sort_keys=True)

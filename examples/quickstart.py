@@ -129,6 +129,39 @@ def main():
           f"mean TTFT {eng.stats.mean_ttft_s * 1e3:.1f}ms, "
           f"lane occupancy {eng.stats.slot_occupancy:.0%}{blocks} (CPU)")
 
+    # 3. The network-facing layer: AsyncFrontend wraps the same engine in
+    # an asyncio streaming API with admission control.  submit() returns
+    # a TokenStream (async-iterate tokens as the scheduler emits them;
+    # aclose() cancels and frees the request's KV blocks); a background
+    # pump drives engine.step() off the event loop through a one-worker
+    # executor.  Admission: at most max_queue_depth requests in flight
+    # (beyond it submit raises RejectedError(kind="backpressure")), and a
+    # closed/open/half-open CircuitBreaker sheds arrivals
+    # (kind="breaker") while preemption churn or pool saturation
+    # persists — deadline=/priority= map onto preempt_policy="deadline"
+    # so prioritized traffic is preempted last.  Streamed tokens are
+    # bit-identical to the closed-loop run() path (tests/test_frontend.py);
+    # `python -m benchmarks.serving_bench` drives Poisson open-loop
+    # traces through this layer and reports p50/p99 TTFT/ITL and
+    # goodput-under-SLO.
+    if eng.mode == "continuous":
+        import asyncio
+        from repro.serving.frontend import AsyncFrontend
+
+        async def stream_demo():
+            async with AsyncFrontend(eng, max_queue_depth=8) as fe:
+                stream = await fe.submit(np.arange(3, 12),
+                                         max_new_tokens=6, priority=1)
+                async for tok in stream:
+                    print(f"streamed[{stream.uid}]: {tok}")
+                return fe.stats
+
+        fstats = asyncio.run(stream_demo())
+        print(f"frontend: accepted={fstats.accepted} "
+              f"completed={fstats.completed} "
+              f"p99 TTFT {eng.stats.p99_ttft_s * 1e3:.1f}ms, "
+              f"p99 ITL {eng.stats.p99_itl_s * 1e3:.1f}ms")
+
 
 if __name__ == "__main__":
     main()

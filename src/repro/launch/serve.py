@@ -2,10 +2,21 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --requests 16 --max-new 32
+
+``--frontend async`` switches from the in-process closed loop to the
+``AsyncFrontend`` service posture: requests arrive on an open-loop
+Poisson clock (``--arrival-rate`` req/s) through admission control
+(``--max-queue-depth`` backpressure, ``--breaker-*`` circuit-breaker
+knobs) and the run reports client-side latency percentiles plus
+goodput under ``--slo-ttft``:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+      --reduced --frontend async --arrival-rate 8 --max-queue-depth 8
 """
 from __future__ import annotations
 
 import argparse
+import json
 import warnings
 
 import jax
@@ -15,6 +26,8 @@ from repro.configs.base import get_config, list_archs
 from repro.models import kv_quant
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
+from repro.serving.frontend import CircuitBreaker
+from repro.serving.openloop import poisson_trace, run_open_loop
 from repro.serving.sampler import SamplerConfig
 
 
@@ -97,6 +110,42 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request (exercises the prefix cache)")
+    ap.add_argument("--frontend", default="sync",
+                    choices=["sync", "async"],
+                    help="'sync': submit everything up front and run the "
+                         "engine closed-loop to drain; 'async': the "
+                         "AsyncFrontend service posture — open-loop "
+                         "Poisson arrivals through streaming admission "
+                         "control, reporting client-side tail latency "
+                         "and goodput-under-SLO")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="[async] open-loop Poisson arrival rate, "
+                         "requests/second (the clock does NOT wait for "
+                         "the scheduler — saturate it and the breaker "
+                         "sheds)")
+    ap.add_argument("--max-queue-depth", type=int, default=32,
+                    help="[async] max accepted-but-unfinished requests; "
+                         "submits beyond it are rejected 503-style "
+                         "(backpressure) instead of queueing unboundedly")
+    ap.add_argument("--slo-ttft", type=float, default=2.0,
+                    help="[async] client-side TTFT SLO (seconds) for the "
+                         "goodput-under-SLO report")
+    ap.add_argument("--breaker-window", type=int, default=16,
+                    help="[async] circuit breaker: sliding window of "
+                         "scheduler ticks scanned for pressure")
+    ap.add_argument("--breaker-trip", type=int, default=4,
+                    help="[async] pressure ticks (preemption or pool "
+                         "saturation) within the window that trip the "
+                         "breaker open")
+    ap.add_argument("--breaker-sat", type=float, default=1.0,
+                    help="[async] live-block pool saturation fraction "
+                         "that counts a tick as pressure")
+    ap.add_argument("--breaker-cooldown", type=int, default=8,
+                    help="[async] ticks the breaker stays open before "
+                         "half-opening to admit probes")
+    ap.add_argument("--breaker-probes", type=int, default=1,
+                    help="[async] probe requests admitted half-open; this "
+                         "many clean completions close the breaker")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -117,6 +166,35 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     system = rng.integers(1, cfg.vocab_size, size=args.shared_prefix)
+
+    if args.frontend == "async":
+        if engine.mode != "continuous":
+            raise SystemExit("--frontend async requires the continuous "
+                             "scheduler (got mode=wave)")
+        # Warm the jit caches closed-loop first so the open-loop clock
+        # measures serving latency, not compilation — one prompt per
+        # prefill bucket the trace can hit (shortest and longest, plus
+        # the shared prefix if any).
+        for n in {4, 16, 16 + args.shared_prefix}:
+            engine.submit(rng.integers(1, cfg.vocab_size, size=n),
+                          max_new_tokens=2)
+        engine.run()
+        trace = poisson_trace(
+            rng, args.requests, args.arrival_rate, cfg.vocab_size,
+            prompt_len=(4, 16), budget=(args.max_new, args.max_new),
+            shared_prefix=system if args.shared_prefix else None,
+            prefix_fraction=0.5 if args.shared_prefix else 0.0)
+        breaker = CircuitBreaker(
+            window=args.breaker_window, trip_pressure=args.breaker_trip,
+            sat_threshold=args.breaker_sat,
+            cooldown_ticks=args.breaker_cooldown,
+            probes=args.breaker_probes)
+        report = run_open_loop(engine, trace,
+                               max_queue_depth=args.max_queue_depth,
+                               breaker=breaker)
+        print(json.dumps(report.summary(args.slo_ttft), indent=2))
+        return
+
     for i in range(args.requests):
         plen = int(rng.integers(4, 17))
         prompt = np.concatenate(

@@ -79,8 +79,16 @@ Knobs (see also examples/quickstart.py):
     off-TPU; "off" forces the jnp references — the pre-kernel gather
     paths).  ``decode_kernel`` is the deprecated PR-4 spelling.
   * ``preempt_policy`` — pool-pressure victim selection: "youngest"
-    (default), "largest" (most blocks held) or "deadline" (latest
-    ``submit(deadline=...)`` evicted first).
+    (default), "largest" (most blocks held) or "deadline".  Under
+    "deadline" eviction order is STRICT on ``submit(deadline=...)``:
+    the latest deadline (most slack) is evicted first, and a request
+    with ``deadline=None`` is treated as infinitely late — evicted
+    before ANY request that named a deadline (ties broken youngest-
+    first).  This makes ``deadline=`` the admission-priority surface:
+    the async frontend (``serving.frontend``) maps request priorities
+    onto it, so deadline-less best-effort traffic is always shed ahead
+    of SLO-carrying traffic.  Pinned by
+    tests/test_decode_dispatch.py::test_preempt_policy_deadline_strict_order.
   * ``kv_dtype`` — on-device KV pool representation.  "fp"/"bf16" store
     dense compute-dtype blocks; "int8"/"fp8" store the SCLAD compressed
     pool (``models.kv_quant``: int8 / float8_e4m3fn payload + per-
@@ -113,6 +121,7 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import math
 import time
 import warnings
 from dataclasses import dataclass, field, replace as dc_replace
@@ -205,6 +214,21 @@ class EngineStats:
     # latency metric the decode-side tokens_per_s cannot see.
     ttft_s_sum: float = 0.0
     ttft_count: int = 0
+    # Per-request latency DISTRIBUTIONS (open-loop serving prices tails,
+    # not means — a p99 TTFT SLO is what admission control defends):
+    #   ttft_history — one submit->first-token sample per request;
+    #   itl_history  — inter-token latency samples at OBSERVATION
+    #     granularity: tokens are released to the host at decode-window
+    #     syncs, so each token after a request's first records the gap
+    #     since that request's previous observation, divided evenly over
+    #     the tokens released in the same window (with decode_steps=1
+    #     every sample is a real host-sync gap; a preemption recompute
+    #     shows up as one honest, long gap — exactly the client's stall).
+    ttft_history: List[float] = field(default_factory=list)
+    itl_history: List[float] = field(default_factory=list)
+    # Requests aborted by the caller mid-flight (async frontend
+    # cancellation); their blocks are released like a retirement.
+    cancellations: int = 0
     # Peak PHYSICAL pool occupancy: blocks referenced by >= 1 lane at the
     # worst moment (retired-but-resident LRU blocks do NOT count — they
     # are reclaimable).  This is the number CC-MEM capacity planning
@@ -236,6 +260,35 @@ class EngineStats:
         """Mean submit->first-token latency over requests that produced at
         least one token."""
         return self.ttft_s_sum / max(self.ttft_count, 1)
+
+    @staticmethod
+    def percentile(history: List[float], q: float) -> float:
+        """Nearest-rank percentile: the ceil(q/100 * n)-th order statistic
+        (q in (0, 100]).  Always an OBSERVED sample — no interpolation —
+        so unit pins on hand-built histories are exact.  Empty history
+        returns 0.0 (no traffic, no tail)."""
+        if not history:
+            return 0.0
+        if not 0.0 < q <= 100.0:
+            raise ValueError(f"percentile q={q} outside (0, 100]")
+        xs = sorted(history)
+        return xs[max(0, math.ceil(q / 100.0 * len(xs)) - 1)]
+
+    @property
+    def p50_ttft_s(self) -> float:
+        return self.percentile(self.ttft_history, 50.0)
+
+    @property
+    def p99_ttft_s(self) -> float:
+        return self.percentile(self.ttft_history, 99.0)
+
+    @property
+    def p50_itl_s(self) -> float:
+        return self.percentile(self.itl_history, 50.0)
+
+    @property
+    def p99_itl_s(self) -> float:
+        return self.percentile(self.itl_history, 99.0)
 
     @property
     def slot_occupancy(self) -> float:
@@ -362,6 +415,17 @@ class ServingEngine:
         self._instant: List[Tuple[int, List[int]]] = []  # zero-budget retires
         #: uid -> submit wall time, consumed when its first token lands.
         self._submit_t: Dict[int, float] = {}
+        #: uid -> host time of the request's latest observed token (feeds
+        #: the inter-token-latency history).
+        self._last_obs_t: Dict[int, float] = {}
+        #: Optional per-token hook ``on_token(uid, token)`` — called on
+        #: the engine's (caller's) thread for EVERY generated token as it
+        #: is observed at a host sync, before the owning request
+        #: finishes.  This is the streaming surface the async frontend
+        #: rides (``serving.frontend``); leave None to skip the calls.
+        #: Preemption recompute replays tokens as PROMPT, so no token is
+        #: ever re-announced.
+        self.on_token: Optional[Callable[[int, int], None]] = None
         #: uid -> (content length, chain digests): a queue head waiting
         #: for capacity is re-matched every scheduler step — hash its
         #: prompt once, not once per step.
@@ -463,12 +527,26 @@ class ServingEngine:
             chain_seed=self._chain_seed(patch_embeds)))
         return uid
 
-    def _note_first_token(self, uid: int) -> None:
-        """Record submit->first-token latency, once per request."""
-        t0 = self._submit_t.pop(uid, None)
-        if t0 is not None:
-            self.stats.ttft_s_sum += time.perf_counter() - t0
-            self.stats.ttft_count += 1
+    def _note_tokens(self, uid: int, m: int, now: float) -> None:
+        """Record latency samples for ``m`` tokens of request ``uid``
+        observed at host time ``now``: the request's first token ever is a
+        TTFT sample; every later token an inter-token-latency sample at
+        observation granularity (see ``EngineStats.itl_history``)."""
+        if m <= 0:
+            return
+        prev = self._last_obs_t.get(uid)
+        if prev is None:
+            t0 = self._submit_t.pop(uid, None)
+            if t0 is not None:
+                self.stats.ttft_s_sum += now - t0
+                self.stats.ttft_count += 1
+                self.stats.ttft_history.append(now - t0)
+            # Any further tokens in this first window left the same host
+            # sync as the first token: there is no measurable gap, so
+            # they contribute no ITL samples (they are part of TTFT).
+        else:
+            self.stats.itl_history.extend([(now - prev) / m] * m)
+        self._last_obs_t[uid] = now
 
     def _chain_seed(self, patch_embeds: Optional[np.ndarray]) -> bytes:
         """Per-request prefix-cache chain root.  Non-vlm content is fully
@@ -545,22 +623,26 @@ class ServingEngine:
             * self._alloc.block_size * K
 
         bs = self._alloc.block_size
+        now = time.perf_counter()
         for i in np.nonzero(was)[0]:
             i = int(i)
             r = self._slot_req[i]
             pos_before = self._prefix + int(self._host_pos[i])
-            alive = True
+            alive, emitted = True, 0
             for j in range(K):
                 if not alive:
                     break
-                r.output.append(int(tok_h[j, i]))
-                if len(r.output) == 1:
-                    self._note_first_token(r.uid)
+                tok = int(tok_h[j, i])
+                r.output.append(tok)
+                emitted += 1
+                if self.on_token is not None:
+                    self.on_token(r.uid, tok)
                 self._host_pos[i] += 1
                 self._host_rem[i] -= 1
                 self.stats.generated_tokens += 1
                 self.stats.occupied_slot_steps += 1
                 alive = bool(active_h[j, i])
+            self._note_tokens(r.uid, emitted, now)
             if self.prefix_cache and \
                     (self._prefix + int(self._host_pos[i])) // bs \
                     != pos_before // bs:
@@ -575,10 +657,71 @@ class ServingEngine:
                 finished.append((r.uid, r.output))
                 self._slot_req[i] = None
                 self._host_active[i] = False
+                self._last_obs_t.pop(r.uid, None)
                 # References drop; exclusive full blocks retire into the
                 # LRU pool (still matchable), partial ones go blank.
                 self._alloc.release(i)
         return finished
+
+    def has_pending_work(self) -> bool:
+        """True while any request is queued, prefilling, decoding or
+        waiting to be retired — i.e. while ``step()`` can make progress."""
+        if self.mode != "continuous":
+            return bool(self._queue or self._instant)
+        return bool(self._queue or self._prefilling or self._instant
+                    or self._host_active.any())
+
+    @property
+    def pool_saturation(self) -> float:
+        """Live (ref-counted) blocks over pool capacity, right now — the
+        saturation signal the frontend's circuit breaker watches."""
+        if self.mode != "continuous":
+            return 0.0
+        return self._alloc.live_blocks / max(self._alloc.num_blocks, 1)
+
+    def cancel(self, uid: int) -> bool:
+        """Abort a request wherever it currently is — queued, mid-prefill
+        or decoding — releasing its KV blocks exactly like a retirement
+        (non-shared blocks free, full exclusive blocks retire into the LRU
+        pool).  Returns True if the request was found in flight; False if
+        it already finished (or was never submitted).  Tokens generated
+        before the cancel are simply dropped — the caller streamed them
+        already.  Continuous mode only (the wave path has no per-request
+        scheduler state to unwind)."""
+        if self.mode != "continuous":
+            raise RuntimeError("cancel() requires mode='continuous'")
+        self._submit_t.pop(uid, None)
+        self._last_obs_t.pop(uid, None)
+        for i, (u, _) in enumerate(self._instant):
+            if u == uid:
+                self._instant.pop(i)
+                self.stats.cancellations += 1
+                return True
+        for i, r in enumerate(self._queue):
+            if r.uid == uid:
+                self._queue.pop(i)
+                self._digest_cache.pop(uid, None)
+                self.stats.cancellations += 1
+                return True
+        for s in self._prefilling:
+            if s.req.uid == uid:
+                self._prefilling.remove(s)
+                self._alloc.release(s.lane)
+                # The abandoned admission's prefix-cache credit never
+                # served anything (same rollback as a preemption).
+                self.stats.cached_prompt_tokens -= s.counted_cached
+                self.stats.cancellations += 1
+                return True
+        for i, r in enumerate(self._slot_req):
+            if r is not None and r.uid == uid:
+                self._slot_req[i] = None
+                self._host_active[i] = False
+                self._host_rem[i] = 0
+                self._active = self._active.at[i].set(False)
+                self._alloc.release(i)
+                self.stats.cancellations += 1
+                return True
+        return False
 
     def run(self) -> Dict[int, List[int]]:
         """Drain the queue; returns uid -> generated tokens."""
@@ -1074,11 +1217,13 @@ class ServingEngine:
             key, sub = jax.random.split(key)
             next_tok = sample(self.sampler, logits.reshape(B, -1), sub)
             nt = np.asarray(next_tok)
+            now = time.perf_counter()
             for i, r in enumerate(wave):
                 if not done[i] and len(r.output) < r.max_new_tokens:
                     r.output.append(int(nt[i]))
-                    if len(r.output) == 1:
-                        self._note_first_token(r.uid)
+                    if self.on_token is not None:
+                        self.on_token(r.uid, int(nt[i]))
+                    self._note_tokens(r.uid, 1, now)
                     self.stats.generated_tokens += 1
                     if nt[i] == self.eos_id:
                         done[i] = True
@@ -1091,3 +1236,5 @@ class ServingEngine:
             logits = logits[:, 0]
         jax.block_until_ready(logits)
         self.stats.decode_s += time.perf_counter() - t0
+        for r in wave:
+            self._last_obs_t.pop(r.uid, None)

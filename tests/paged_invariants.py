@@ -1,0 +1,30 @@
+"""Invariant helpers shared by the randomized property suites.
+
+Kept free of hypothesis so deterministic (seeded) trace tests can reuse
+them in environments where hypothesis is not installed — the property
+modules import from here.
+"""
+
+
+def shared_prefix_sound(store, contents):
+    """Any block listed by two lanes implies identical content up to and
+    including that block.
+
+    ``contents`` maps slot -> the lane's canonical token contents; a
+    lane's block table only ever covers a prefix of it, which is all
+    this compares.
+    """
+    bs = store.block_size
+    owners = {}
+    for slot, blocks in store._blocks.items():
+        for idx, b in enumerate(blocks):
+            owners.setdefault(b, []).append((slot, idx))
+    for b, occ in owners.items():
+        if len(occ) < 2:
+            continue
+        (s0, i0) = occ[0]
+        for (s1, i1) in occ[1:]:
+            assert i0 == i1, f"block {b} at different indices"
+            n = (i0 + 1) * bs
+            assert list(contents[s0][:n]) == list(contents[s1][:n]), (
+                f"block {b} shared by lanes with diverging prefixes")

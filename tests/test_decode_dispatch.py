@@ -224,6 +224,47 @@ def test_preempt_policy_deadline(tiny):
     assert victims2 and victims2[0] == big2
 
 
+def test_preempt_policy_deadline_strict_order(tiny):
+    """The documented total order of ``preempt_policy="deadline"`` (see
+    the engine module docstring): eviction strictly follows
+    ``submit(deadline=)`` — the LATEST deadline goes first, and a
+    ``deadline=None`` request is infinitely late, evicted before ANY
+    request that has a deadline.  Submission age must not leak in: the
+    deadline-less request is submitted FIRST (oldest), so the default
+    youngest-first order would pick a different victim — if this test
+    sees the old deadline-less request evicted, ordering really came
+    from deadlines.  The tight-deadline request (evicted last in the
+    order) must never be preempted, and every output still matches the
+    unpressured run (preemption stays invisible in outputs)."""
+    cfg, params = tiny
+    prompts = [np.arange(1, 8), np.arange(3, 10), np.arange(5, 12)]
+    budget = 8
+    eng = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
+                        eos_id=-1, block_size=4, num_blocks=9,
+                        prefill_chunk=None, preempt_policy="deadline")
+    victims = _spy_preemptions(eng)
+    u_none = eng.submit(prompts[0], max_new_tokens=budget, deadline=None)
+    u_late = eng.submit(prompts[1], max_new_tokens=budget, deadline=10.0)
+    u_tight = eng.submit(prompts[2], max_new_tokens=budget, deadline=1.0)
+    out = eng.run()
+    assert victims, "9-block pool under 3 growing requests must preempt"
+    assert victims[0] == u_none, (
+        f"first victim must be the deadline-less request (None = "
+        f"infinitely late), got {victims[0]}")
+    # Strict order all the way down: only the None and latest-deadline
+    # requests are ever evicted; the tight deadline survives every round.
+    assert set(victims) <= {u_none, u_late}
+    assert u_tight not in victims
+    # Recompute is invisible: every request matches its unpressured run.
+    ref = ServingEngine(cfg, params, max_batch=3, max_len=MAX_LEN,
+                        eos_id=-1, block_size=4, num_blocks=24,
+                        prefill_chunk=None)
+    ref_uids = [ref.submit(p, max_new_tokens=budget) for p in prompts]
+    ref_out = ref.run()
+    assert [out[u] for u in (u_none, u_late, u_tight)] \
+        == [ref_out[u] for u in ref_uids]
+
+
 def test_preempt_policy_validated(tiny):
     cfg, params = tiny
     with pytest.raises(ValueError, match="preempt_policy"):

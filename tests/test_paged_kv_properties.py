@@ -18,24 +18,9 @@ from hypothesis import given, settings, strategies as st
 from repro.serving.paged import (BlockStore, OutOfBlocks, TRASH_BLOCK,
                                  chain_hashes, chain_root_for)
 
-
-def _shared_prefix_sound(store, contents):
-    """Any block listed by two lanes implies identical content up to and
-    including that block."""
-    bs = store.block_size
-    owners = {}
-    for slot, blocks in store._blocks.items():
-        for idx, b in enumerate(blocks):
-            owners.setdefault(b, []).append((slot, idx))
-    for b, occ in owners.items():
-        if len(occ) < 2:
-            continue
-        (s0, i0) = occ[0]
-        for (s1, i1) in occ[1:]:
-            assert i0 == i1, f"block {b} at different indices"
-            n = (i0 + 1) * bs
-            assert list(contents[s0][:n]) == list(contents[s1][:n]), (
-                f"block {b} shared by lanes with diverging prefixes")
+# Shared with the frontend interleaving suite (which also runs seeded,
+# hypothesis-free traces); the helper itself has no hypothesis dependency.
+from paged_invariants import shared_prefix_sound as _shared_prefix_sound
 
 
 @settings(max_examples=60, deadline=None)
