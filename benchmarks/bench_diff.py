@@ -1,0 +1,73 @@
+"""Per-key delta report between two BENCH_serving.json artifacts.
+
+CI runs this as a NON-BLOCKING report step after the smoke bench: the
+committed artifact (the baseline the repo ships) next to the fresh run,
+so a PR's perf movement is visible in the job log without gating merges
+on CPU-runner timing noise.  Numeric leaves print old -> new with the
+absolute and relative delta; non-numeric leaves print only when they
+changed; keys present on one side only are listed as added/removed.
+
+  PYTHONPATH=src python -m benchmarks.bench_diff BENCH_serving.json /tmp/fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def _leaves(node, prefix=""):
+    """Flatten nested dicts to {dotted.path: leaf} (lists are leaves)."""
+    if isinstance(node, dict):
+        out = {}
+        for k, v in node.items():
+            out.update(_leaves(v, f"{prefix}.{k}" if prefix else str(k)))
+        return out
+    return {prefix: node}
+
+
+def _is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def diff_lines(old: dict, new: dict) -> list[str]:
+    """One line per changed/added/removed leaf, sorted by path."""
+    a, b = _leaves(old), _leaves(new)
+    lines = []
+    for path in sorted(a.keys() | b.keys()):
+        if path not in b:
+            lines.append(f"- {path}: {a[path]!r} (removed)")
+        elif path not in a:
+            lines.append(f"+ {path}: {b[path]!r} (added)")
+        elif _is_num(a[path]) and _is_num(b[path]):
+            o, n = a[path], b[path]
+            if o == n:
+                continue
+            rel = f" ({(n - o) / o:+.1%})" if o else ""
+            lines.append(f"~ {path}: {o:g} -> {n:g} [{n - o:+g}]{rel}")
+        elif a[path] != b[path]:
+            lines.append(f"~ {path}: {a[path]!r} -> {b[path]!r}")
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("old", help="baseline artifact (e.g. the committed "
+                                "BENCH_serving.json)")
+    ap.add_argument("new", help="fresh artifact (e.g. this run's --json)")
+    args = ap.parse_args()
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    lines = diff_lines(old, new)
+    if not lines:
+        print("bench_diff: no differences")
+        return
+    print(f"bench_diff: {len(lines)} differing keys "
+          f"({args.old} -> {args.new})")
+    for line in lines:
+        print(f"  {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -104,7 +104,26 @@ def main():
     #                   blocks across kv_dtypes.  Vs the fp-exact pool,
     #                   last-token logits stay within the documented
     #                   gates (tests/test_kv_quant.py: int8 <= 0.15,
-    #                   fp8 <= 0.35 max abs error on the smoke configs).
+    #                   fp8 <= 0.35 max abs error on the smoke configs);
+    #   spec_decode   — speculative multi-token decoding: "off" (default)
+    #                   or "ngram" (suffix-match draft proposer).  Each
+    #                   step drafts up to spec_k tokens per lane from the
+    #                   lane's own history, scores anchor+drafts in ONE
+    #                   flash-prefill pass, keeps the longest prefix that
+    #                   matches what plain decode would sample, and rolls
+    #                   rejected K/V back (BlockStore.truncate).  Outputs
+    #                   are bit-identical to spec_decode="off" on the
+    #                   reference attention path — speculation only
+    #                   changes tokens-per-host-sync, never a token;
+    #   spec_k        — max drafted tokens per lane per verify pass.
+    #                   The win scales with draft ACCEPTANCE RATE: text
+    #                   that revisits its own n-grams (code, JSON, chat
+    #                   templates, repetitive suffixes) accepts most
+    #                   drafts and can approach (1 + spec_k) tokens per
+    #                   sync; adversarially random output accepts ~none
+    #                   and pays only the slightly wider verify pass.
+    #                   stats.spec_acceptance_rate tells you which regime
+    #                   a workload is in — below ~0.2, leave spec off.
     eng = ServingEngine(cfg, params, max_batch=2, max_len=48, eos_id=-1,
                         block_size=8, prefill_chunk=16, prefix_cache=True,
                         decode_steps=1,

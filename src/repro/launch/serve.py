@@ -29,6 +29,8 @@ from repro.serving.engine import ServingEngine
 from repro.serving.frontend import CircuitBreaker
 from repro.serving.openloop import poisson_trace, run_open_loop
 from repro.serving.sampler import SamplerConfig
+from repro.serving.spec import SPEC_DECODE_MODES
+from repro.serving.warmup import warmup_prefill
 
 
 def resolve_attn_kernel_arg(attn_kernel, decode_kernel) -> str:
@@ -102,6 +104,18 @@ def main():
                          "~2x token context per device byte, dequantized "
                          "on the load path by references and kernels "
                          "alike).  Default: the config's setting")
+    ap.add_argument("--spec-decode", default="off",
+                    choices=list(SPEC_DECODE_MODES),
+                    help="speculative multi-token decoding: 'ngram' drafts "
+                         "continuations from each request's own history, "
+                         "verifies them in one chunked-prefill pass and "
+                         "rolls rejected K/V back — outputs stay "
+                         "bit-identical to 'off'; wins on repetitive/"
+                         "structured output, neutral on random text")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens proposed per lane per step "
+                         "(with --spec-decode; up to spec_k+1 tokens emit "
+                         "per verify pass)")
     ap.add_argument("--preempt-policy", default="youngest",
                     choices=["youngest", "largest", "deadline"],
                     help="which in-flight request pool pressure preempts: "
@@ -162,6 +176,7 @@ def main():
         attn_kernel=resolve_attn_kernel_arg(args.attn_kernel,
                                             args.decode_kernel),
         preempt_policy=args.preempt_policy, kv_dtype=args.kv_dtype,
+        spec_decode=args.spec_decode, spec_k=args.spec_k,
         sampler=SamplerConfig(temperature=args.temperature, top_k=50))
 
     rng = np.random.default_rng(args.seed)
@@ -172,13 +187,11 @@ def main():
             raise SystemExit("--frontend async requires the continuous "
                              "scheduler (got mode=wave)")
         # Warm the jit caches closed-loop first so the open-loop clock
-        # measures serving latency, not compilation — one prompt per
-        # prefill bucket the trace can hit (shortest and longest, plus
-        # the shared prefix if any).
-        for n in {4, 16, 16 + args.shared_prefix}:
-            engine.submit(rng.integers(1, cfg.vocab_size, size=n),
-                          max_new_tokens=2)
-        engine.run()
+        # measures serving latency, not compilation — every (admission
+        # group size, chunk bucket) shape the trace can hit, not just
+        # group size 1 (see serving.warmup).
+        warmup_prefill(engine, cfg.vocab_size,
+                       prompt_lens=(4, 16, 16 + args.shared_prefix))
         trace = poisson_trace(
             rng, args.requests, args.arrival_rate, cfg.vocab_size,
             prompt_len=(4, 16), budget=(args.max_new, args.max_new),
@@ -224,6 +237,10 @@ def main():
           f"generated {s.generated_tokens} tok in {s.decode_s:.2f}s "
           f"({s.tokens_per_s:.1f} tok/s, mode={engine.mode}, "
           f"lane occupancy {s.slot_occupancy:.0%}{paged[1]})")
+    if engine.spec_decode != "off":
+        print(f"spec[{engine.spec_decode}] {s.spec_passes} verify passes, "
+              f"draft acceptance {s.spec_acceptance_rate:.0%} "
+              f"({s.spec_accepted}/{s.spec_proposed})")
 
 
 if __name__ == "__main__":

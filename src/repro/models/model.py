@@ -510,7 +510,8 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
                   tokens: jnp.ndarray, lengths: jnp.ndarray,
                   block_tables: jnp.ndarray,
                   start: Optional[jnp.ndarray] = None,
-                  patch_embeds: Optional[jnp.ndarray] = None
+                  patch_embeds: Optional[jnp.ndarray] = None,
+                  all_logits: bool = False
                   ) -> Tuple[jnp.ndarray, Params]:
     """Prefill one left-padded prompt CHUNK per row into a paged KV cache.
 
@@ -567,6 +568,15 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
     expert capacity and cannot displace live tokens.
     Returns (last-real-token logits (Bn, vocab), updated cache).  The
     logits are only meaningful on a row's FINAL chunk.
+
+    ``all_logits=True`` instead returns per-position logits (Bn, P, vocab)
+    over the CHUNK's token columns (the vlm patch prefix is excluded) —
+    the speculative-decode verify entry point: the engine feeds
+    [last-accepted | drafts] as a continuation chunk and needs the logits
+    AT every drafted position to check each draft against what plain
+    decode would have sampled.  Left padding means row positions < pad are
+    junk; callers mask by ``lengths``.  The K/V write-through is identical
+    either way (drafted K/V lands in the pool optimistically).
     """
     fam = cfg.family
     if fam not in ("dense", "moe", "vlm"):
@@ -638,7 +648,10 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
             body, h, (params["blocks"], cache["k"], cache["v"]))
         cache = dict(cache, k=ks, v=vs)
     # Left padding aligns every row's last REAL token at index S-1.
-    logits = unembed(cfg, params, h[:, -1])
+    if all_logits:
+        logits = unembed(cfg, params, h[:, prefix:])  # (Bn, P, vocab)
+    else:
+        logits = unembed(cfg, params, h[:, -1])
     return logits, cache
 
 

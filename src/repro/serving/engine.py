@@ -138,7 +138,8 @@ from repro.models import model as M
 from repro.parallel import sharding
 from repro.serving.paged import (BlockStore, CHAIN_ROOT, OutOfBlocks,
                                  TRASH_BLOCK, chain_hashes, chain_root_for)
-from repro.serving.sampler import SamplerConfig, sample
+from repro.serving.sampler import SamplerConfig, positional_keys, sample
+from repro.serving.spec import SPEC_DECODE_MODES, make_proposer
 
 # Families whose KV cache supports block-level admission (see module doc).
 CONTINUOUS_FAMILIES = ("dense", "moe", "vlm")
@@ -244,6 +245,15 @@ class EngineStats:
     # serving more token-context than the pool physically stores.
     used_token_steps: int = 0
     pool_token_steps: int = 0
+    # Speculative decoding (spec_decode != "off"): verify passes run, draft
+    # tokens proposed, and draft tokens accepted (the emitted-ahead-of-
+    # plain-decode tokens; the per-pass anchor token is not a draft and
+    # counts in neither).  acceptance = accepted / proposed is the knob
+    # benchmarks watch: every accepted draft amortizes one full-pool KV
+    # sweep, every rejected one cost a wasted optimistic write + rollback.
+    spec_passes: int = 0
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     @property
     def tokens_per_s(self) -> float:
@@ -320,6 +330,12 @@ class EngineStats:
         """Peak device bytes held by live KV blocks."""
         return self.peak_live_blocks * self.kv_block_bytes
 
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Accepted draft tokens over proposed draft tokens (0.0 when
+        speculation is off or never proposed anything)."""
+        return self.spec_accepted / max(self.spec_proposed, 1)
+
 
 def _bucket(n: int, cap: int) -> int:
     """Smallest power-of-two >= n (min 8), capped at cap."""
@@ -342,7 +358,8 @@ class ServingEngine:
                  attn_kernel: Optional[str] = None,
                  decode_kernel: Optional[str] = None,
                  preempt_policy: str = "youngest",
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 spec_decode: str = "off", spec_k: int = 4):
         """mode: "auto" (continuous where the family supports it),
         "continuous" (error if unsupported) or "wave" (force the legacy
         lockstep baseline).
@@ -372,9 +389,49 @@ class ServingEngine:
         scales; ~2x token context per device byte, dequantized on load
         by references and kernels alike).  None keeps the config's
         setting.  See the module docstring.
+
+        spec_decode / spec_k: speculative multi-token decoding ("off" or
+        "ngram"; continuous mode only).  Per scheduler step each lane
+        samples its next token as usual, then a draft proposer
+        (``serving.spec``) proposes up to ``spec_k`` continuation tokens
+        from the request's own history; the (anchor + drafts) chunk is
+        scored in ONE pass through the chunked-prefill path (drafted K/V
+        written into the pool optimistically) and the engine keeps the
+        longest draft prefix matching what plain decode would have
+        sampled, rolling the rejected tail back via
+        ``BlockStore.truncate``.  Correctness contract: emitted tokens
+        are BIT-IDENTICAL to ``spec_decode="off"`` for greedy AND
+        stochastic sampling — the verify pass re-samples each drafted
+        position with the SAME positional PRNG key plain decode would
+        have used (``sampler.positional_keys``: the token at position p
+        of request uid draws from ``fold_in(fold_in(seed, uid), p)``).
+        The PRNG "fast-forward" rule falls out of that: positions only
+        advance by ACCEPTED tokens, so the stochastic stream never skips
+        ahead over rejected drafts — speculation changes throughput,
+        never outputs.  With speculation on, each ``step()`` runs one
+        verify pass (up to ``spec_k + 1`` tokens per lane) and
+        ``decode_steps`` window batching is not used.
+
+        Scope of the bit-identity contract: it is EXACT on the jnp
+        reference path (``attn_kernel="off"``, or "auto" off-TPU).
+        Under ``attn_kernel="on"`` speculation moves decode-position
+        scoring from the flash-decode kernel into the flash-prefill
+        kernel, whose online-softmax accumulation tiles keys differently
+        (context blocks split at ``start`` plus one in-chunk tile vs
+        block-aligned tiles) — the same cross-implementation situation
+        as kernel-vs-reference, and the same contract applies: logits
+        agree to dtype tolerance, a near-tie greedy argmax can flip, and
+        all scheduling invariants (prefix sharing, preemption recompute,
+        chunked prefill) still hold bit-identically WITHIN the
+        speculative configuration.
         """
         if decode_steps < 1:
             raise ValueError("decode_steps must be >= 1")
+        if spec_decode not in SPEC_DECODE_MODES:
+            raise ValueError(
+                f"spec_decode {spec_decode!r} not in {SPEC_DECODE_MODES}")
+        if spec_k < 1:
+            raise ValueError("spec_k must be >= 1")
         if preempt_policy not in PREEMPT_POLICIES:
             raise ValueError(
                 f"preempt_policy {preempt_policy!r} not in "
@@ -439,7 +496,15 @@ class ServingEngine:
             raise ValueError(
                 f"family {cfg.family!r} has no block-addressable KV cache; "
                 f"use mode='wave'")
+        if spec_decode != "off" and mode != "continuous":
+            raise ValueError(
+                "spec_decode requires the continuous (paged) engine: the "
+                "verifier is the paged chunked-prefill path and rollback "
+                "is a BlockStore operation")
         self.mode = mode
+        self.spec_decode = spec_decode
+        self.spec_k = spec_k
+        self._proposer = make_proposer(spec_decode)
         self.block_size = block_size
         self.num_blocks = num_blocks
         self.prefill_chunk = prefill_chunk
@@ -531,7 +596,15 @@ class ServingEngine:
         """Record latency samples for ``m`` tokens of request ``uid``
         observed at host time ``now``: the request's first token ever is a
         TTFT sample; every later token an inter-token-latency sample at
-        observation granularity (see ``EngineStats.itl_history``)."""
+        observation granularity (see ``EngineStats.itl_history``) — the
+        host-sync gap spread evenly over the ``m`` tokens of the window.
+
+        Every multi-token emission path shares this one rule: a
+        ``decode_steps > 1`` window passes the tokens the window released,
+        and a speculative verify pass passes the ACCEPTED count (anchor +
+        accepted drafts) — never the proposed count, so rejected drafts
+        cannot dilute the distribution with tokens the client never
+        received.  Pinned in tests/test_latency_stats.py."""
         if m <= 0:
             return
         prev = self._last_obs_t.get(uid)
@@ -584,6 +657,8 @@ class ServingEngine:
         self._prefill_step()
         if not self._host_active.any():
             return finished
+        if self._proposer is not None:
+            return self._spec_step(finished)
 
         K = self.decode_steps
         # Hand each about-to-decode lane the blocks its next (up to K)
@@ -663,6 +738,147 @@ class ServingEngine:
                 self._alloc.release(i)
         return finished
 
+    def _spec_step(self, finished: List[Tuple[int, List[int]]]
+                   ) -> List[Tuple[int, List[int]]]:
+        """One speculative decode pass across all decoding lanes.
+
+        1. Obtain each lane's ANCHOR token — exactly what plain decode
+           would sample.  In steady state it was already computed by the
+           PREVIOUS verify pass (``anchor_next``, cached per lane), so no
+           extra dispatch runs; only lanes whose logits were never scored
+           by a verify pass (fresh prefill, preemption recompute) fall
+           back to the ``_spec_anchor_fn`` dispatch.
+        2. Host: the proposer drafts up to ``spec_k`` continuations from
+           the request's own history (none past EOS or the budget).
+        3. Grow + write-barrier each lane's blocks for the whole chunk
+           (optimistic: pool pressure preempts, exactly like decode).
+        4. ONE fixed-shape verify pass (``_spec_verify_fn``) scores every
+           lane's [anchor | drafts] chunk through chunked prefill,
+           writing drafted K/V through to the pool, and returns how many
+           drafts plain decode would have emitted.
+        5. Emit the accepted prefix through ``on_token`` (stopping at
+           EOS/budget exactly like decode), rewind ``_host_pos`` past
+           nothing — positions only ever advanced by accepted tokens —
+           and ``BlockStore.truncate`` the rejected tail's K/V.
+
+        The anchor's NEXT sample is not emitted here: the verify pass
+        hands back the last accepted position's logits, so the next
+        pass's anchor IS that token — engine logits state stays exactly
+        plain decode's, which is what makes the bit-identity contract
+        compositional across passes.
+        """
+        B = self.max_batch
+        t0 = time.perf_counter()
+        live = [int(i) for i in np.nonzero(self._host_active)[0]]
+        # Anchors are popped (not read): a lane that doesn't survive to
+        # the end of this pass re-derives its anchor from replayed logits
+        # next time, so a stale cache entry can never outlive its request.
+        cached = {i: self._spec_next.pop(i) for i in list(self._spec_next)}
+        if any(i not in cached for i in live):
+            anchors = np.asarray(self._spec_anchor_fn(
+                self._logits, self._keys,
+                jnp.asarray(self._host_pos, jnp.int32),
+                jnp.asarray(self._host_active)))
+        chunks: Dict[int, List[int]] = {}
+        for i in live:
+            r = self._slot_req[i]
+            chunk = [cached[i] if i in cached else int(anchors[i])]
+            rem_after = int(self._host_rem[i]) - 1
+            if chunk[0] != self.eos_id and rem_after > 0:
+                k = min(self.spec_k, rem_after)
+                hist = [int(t) for t in r.prompt] + r.output + chunk
+                chunk += [int(d) for d in
+                          self._proposer.propose(hist, k)[:k]]
+            chunks[i] = chunk
+        for i in chunks:
+            if not self._host_active[i]:
+                continue  # preempted while an earlier lane grew
+            lo = self._prefix + int(self._host_pos[i])
+            self._grow_for_writes(
+                i, lo, lo + len(chunks[i]),
+                alive=lambda i=i: bool(self._host_active[i]))
+        if not self._host_active.any():
+            self.stats.decode_s += time.perf_counter() - t0
+            return finished
+        self._note_peak()
+
+        P = self.spec_k + 1
+        tokens = np.full((B, P), self.pad_id, np.int32)
+        lengths = np.zeros(B, np.int32)
+        starts = np.zeros(B, np.int32)
+        for i, chunk in chunks.items():
+            if not self._host_active[i]:
+                continue  # its anchor is discarded; recompute replays it
+            lengths[i] = len(chunk)
+            tokens[i, P - len(chunk):] = chunk
+            starts[i] = self._prefix + int(self._host_pos[i])
+            self.stats.spec_proposed += len(chunk) - 1
+        tables = jnp.asarray(self._alloc.block_table())
+        self._cache, self._logits, v_dev, anext_dev = self._spec_verify_fn(
+            self.params, self._cache, jnp.asarray(tokens),
+            jnp.asarray(lengths), tables, jnp.asarray(starts),
+            self._keys, self._logits)
+        v = np.asarray(v_dev)
+        anext = np.asarray(anext_dev)
+        self.stats.decode_s += time.perf_counter() - t0
+
+        self.stats.peak_decode_lanes = max(self.stats.peak_decode_lanes,
+                                           int((lengths > 0).sum()))
+        self.stats.spec_passes += 1
+        self.stats.decode_steps += 1
+        self.stats.slot_steps += B
+        self.stats.used_token_steps += self._alloc.live_tokens
+        self.stats.pool_token_steps += self._alloc.num_blocks \
+            * self._alloc.block_size
+
+        bs = self._alloc.block_size
+        now = time.perf_counter()
+        for i in np.nonzero(lengths > 0)[0]:
+            i = int(i)
+            r = self._slot_req[i]
+            chunk = chunks[i]
+            lo = self._prefix + int(self._host_pos[i])
+            emitted, alive = 0, True
+            # Accepted tokens are EXACTLY what plain decode would emit, so
+            # the retirement walk is the same: stop at EOS or budget zero.
+            for j in range(int(v[i]) + 1):
+                tok = chunk[j]
+                r.output.append(tok)
+                emitted += 1
+                if self.on_token is not None:
+                    self.on_token(r.uid, tok)
+                self._host_pos[i] += 1
+                self._host_rem[i] -= 1
+                self.stats.generated_tokens += 1
+                if tok == self.eos_id or self._host_rem[i] <= 0:
+                    alive = False
+                    break
+            self.stats.spec_accepted += emitted - 1
+            self.stats.occupied_slot_steps += 1
+            # One host sync released `emitted` tokens: the ITL window gap
+            # spreads over ACCEPTED tokens (rejected drafts never reached
+            # the client, so they must not dilute the distribution).
+            self._note_tokens(r.uid, emitted, now)
+            if emitted < len(chunk):
+                # Rejected-tail rollback: the optimistic writes past the
+                # accepted prefix are un-committed (refcount/chain-safe).
+                self._alloc.truncate(i, lo + emitted)
+            if self.prefix_cache and (lo + emitted) // bs != lo // bs:
+                self._alloc.commit_full(i, self._content_ids(r))
+            if not alive:
+                r.done = True
+                finished.append((r.uid, r.output))
+                self._slot_req[i] = None
+                self._host_active[i] = False
+                self._last_obs_t.pop(r.uid, None)
+                self._alloc.release(i)
+            else:
+                # The lane consumed its whole accepted prefix (emitted ==
+                # v + 1), so its position is exactly where `anchor_next`
+                # was sampled — carry it as next pass's anchor.
+                self._spec_next[i] = int(anext[i])
+        return finished
+
     def has_pending_work(self) -> bool:
         """True while any request is queued, prefilling, decoding or
         waiting to be retired — i.e. while ``step()`` can make progress."""
@@ -718,6 +934,8 @@ class ServingEngine:
                 self._host_active[i] = False
                 self._host_rem[i] = 0
                 self._active = self._active.at[i].set(False)
+                if self._proposer is not None:
+                    self._spec_next.pop(i, None)
                 self._alloc.release(i)
                 self.stats.cancellations += 1
                 return True
@@ -787,10 +1005,10 @@ class ServingEngine:
                 # Positional per-lane keys: the token at position p of
                 # request uid samples with fold_in(fold_in(seed, uid), p)
                 # — reproducible per request regardless of co-tenants, and
-                # preemption-invariant by construction (a recompute
-                # resamples position p with the same key; no stream
-                # fast-forwarding needed).
-                sub = jax.vmap(jax.random.fold_in)(keys, pos)
+                # preemption/speculation-invariant by construction (a
+                # recompute resamples position p with the same key; no
+                # stream fast-forwarding needed).
+                sub = positional_keys(keys, pos)
                 tok = sample(sampler, logits, sub, active=active,
                              pad_id=pad_id)
                 budget = budget - active.astype(jnp.int32)
@@ -840,6 +1058,79 @@ class ServingEngine:
                 lambda p, c, t, ln, bt, st: M.prefill_slots(
                     cfg, p, c, t, ln, bt, start=st)),
             donate_argnums=(1,) if donate else ())
+
+        if self._proposer is not None:
+            pfx = self._prefix
+            # lane -> anchor token carried from the previous verify pass
+            # (see _spec_step); invalidated whenever a request leaves its
+            # lane (retire, preempt, cancel).
+            self._spec_next: Dict[int, int] = {}
+
+            def spec_anchor(logits, keys, pos, active):
+                """The pass's first token — EXACTLY decode's sampling rule
+                (same positional key, same active masking)."""
+                return sample(sampler, logits, positional_keys(keys, pos),
+                              active=active, pad_id=pad_id)
+
+            self._spec_anchor_fn = jax.jit(self._scoped(spec_anchor))
+
+            def spec_verify(params, cache, tokens, lengths, tables, starts,
+                            keys, last_logits):
+                """Score each lane's [anchor | drafts] chunk in ONE
+                chunked-prefill continuation pass (all B lanes, fixed
+                (B, spec_k + 1) shape -> one trace for the whole run;
+                rows with length 0 read junk and write nothing) and
+                compute in-jit how many drafts plain decode would have
+                emitted.  The chunk's K/V lands in the pool through the
+                prefill write-through — optimistically; the host rolls
+                back the rejected tail with ``BlockStore.truncate``."""
+                logits_all, cache = M.prefill_slots(
+                    cfg, params, cache, tokens, lengths, tables,
+                    start=starts, all_logits=True)
+                Bn, P = tokens.shape
+                pad = (P - lengths).astype(jnp.int32)
+                # Column c of row b holds the token AT token-position
+                # (starts[b] - pfx) + (c - pad[b]); what plain decode
+                # emits AFTER it samples logits_all[b, c] with the key of
+                # the NEXT position.
+                col = jnp.arange(P)[None]
+                nxt = (starts - pfx)[:, None] \
+                    + jnp.maximum(col - pad[:, None], 0) + 1
+                flat_keys = positional_keys(
+                    jnp.repeat(keys, P, axis=0), nxt.reshape(-1))
+                expected = sample(
+                    sampler, logits_all.reshape(Bn * P, -1),
+                    flat_keys).reshape(Bn, P)
+                # Longest accepted draft prefix: draft at column c+1 is
+                # accepted iff it equals what decode emits after column c.
+                ok = tokens[:, 1:] == expected[:, :-1]
+                idx = jnp.arange(P - 1)[None]
+                lead = jnp.where(idx < pad[:, None], True, ok)
+                run = jnp.cumprod(lead.astype(jnp.int32), axis=1).sum(1)
+                v = jnp.clip(run - pad, 0, jnp.maximum(lengths - 1, 0))
+                # Next-step logits: the last ACCEPTED token's column (the
+                # anchor for the next pass — its sample is next pass's
+                # first token, so no logits state diverges from plain
+                # decode).  Idle rows keep their previous logits.
+                sel = jnp.minimum(pad + v, P - 1)
+                new_logits = jnp.take_along_axis(
+                    logits_all, sel[:, None, None], axis=1)[:, 0]
+                new_logits = jnp.where((lengths > 0)[:, None], new_logits,
+                                       last_logits)
+                # `expected` at the selected column IS the next pass's
+                # anchor (same logits, same positional key the anchor fn
+                # would use after the accepted tokens advance the
+                # position) — returning it here makes the steady-state
+                # pass a SINGLE dispatch: the host caches it per lane and
+                # only falls back to the anchor fn for lanes fresh out of
+                # prefill/preemption, whose logits it has never scored.
+                anchor_next = jnp.take_along_axis(
+                    expected, sel[:, None], axis=1)[:, 0]
+                return cache, new_logits, v, anchor_next
+
+            self._spec_verify_fn = jax.jit(
+                self._scoped(spec_verify),
+                donate_argnums=(1,) if donate else ())
 
     def _clamped_budget(self, prompt, max_new_tokens: int) -> int:
         """Decode budget clamped so the sequence fits the per-request
@@ -934,6 +1225,10 @@ class ServingEngine:
             self._host_active[v] = False
             self._host_rem[v] = 0
             self._active = self._active.at[v].set(False)
+            if self._proposer is not None:
+                # The carried anchor belongs to the evicted request; the
+                # recompute replays its logits and re-derives it.
+                self._spec_next.pop(v, None)
             self._alloc.release(v)
             self._queue.insert(0, r)
         else:

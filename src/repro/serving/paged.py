@@ -401,11 +401,15 @@ class BlockStore:
             self._table[slot, idx] = nb
             self.cow_copies += 1
             return (b, nb)
-        h = self._hash.pop(b, None)
-        if h is not None:
-            if self._index.get(h) == b:
-                del self._index[h]
+        self._unregister(b)
         return None
+
+    def _unregister(self, block: int) -> None:
+        """Drop ``block`` from the prefix index: its content no longer
+        matches its digest (or is about to stop matching)."""
+        h = self._hash.pop(block, None)
+        if h is not None and self._index.get(h) == block:
+            del self._index[h]
 
     def commit_full(self, slot: int, content: Sequence[int]) -> int:
         """Register the lane's full, written blocks in the prefix index.
@@ -439,6 +443,58 @@ class BlockStore:
             self._index[h] = b
             added += 1
         return added
+
+    def truncate(self, slot: int, new_len: int) -> List[int]:
+        """Roll the lane back to ``new_len`` tokens — the speculative-decode
+        rejection path: drafted K/V was written through the pool
+        optimistically, the verifier rejected a suffix, and the lane's
+        logical length rewinds.
+
+        Safety rules (pinned in tests/test_paged_kv.py):
+
+        * blocks past ``blocks_for(new_len)`` lose this lane's reference;
+          at refcount zero they are unregistered and go to the FREE list,
+          never the LRU pool — their tail bytes are untrusted, so a stale
+          digest must not be able to revive them;
+        * a now-partial boundary block that this lane owns exclusively is
+          unregistered (its tail holds rolled-back bytes that a future
+          write will replace, so its digest no longer binds);
+        * a SHARED boundary block keeps its registration and is not
+          touched: the lane can never have written it (the copy-on-write
+          barrier in ``ensure_writable`` forbids it), so its content is
+          still exactly its digest and every other owner stays intact;
+        * cached chain digests from the first rolled-back block on are
+          invalidated, so a later ``commit_full`` re-hashes the suffix the
+          lane actually wrote instead of reviving the stale chain.
+
+        Returns the block ids whose refcount reached zero (freed).
+        """
+        if slot not in self._blocks:
+            raise ValueError(f"slot {slot} not admitted")
+        if not 0 <= new_len <= self._len[slot]:
+            raise ValueError(
+                f"slot {slot} cannot truncate to {new_len} "
+                f"(grown length {self._len[slot]})")
+        keep = self.blocks_for(new_len)
+        owned = self._blocks[slot]
+        del self._chain[slot][new_len // self.block_size:]
+        dropped: List[int] = []
+        while len(owned) > keep:
+            b = owned.pop()
+            self._table[slot, len(owned)] = TRASH_BLOCK
+            self._ref[b] -= 1
+            assert self._ref[b] >= 0, f"block {b} refcount went negative"
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._unregister(b)
+                self._free.append(b)
+                dropped.append(b)
+        if new_len % self.block_size and keep:
+            b = owned[keep - 1]
+            if self._ref[b] == 1:
+                self._unregister(b)
+        self._len[slot] = new_len
+        return dropped
 
     def release(self, slot: int) -> List[int]:
         """Retire a request: drop one reference from each of its blocks.

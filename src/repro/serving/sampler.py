@@ -13,6 +13,26 @@ class SamplerConfig:
     top_k: int = 0  # 0 => no truncation
 
 
+def positional_keys(keys: jnp.ndarray, positions: jnp.ndarray) -> jnp.ndarray:
+    """Per-row sampling keys for tokens at ``positions``: row b's token at
+    position p draws from ``fold_in(keys[b], p)``.
+
+    This is THE positional-PRNG rule the serving engine builds on: with
+    ``keys[b] = fold_in(seed, uid_b)``, the key of (request, position) is a
+    pure function of the pair — independent of co-tenants, of preemption
+    recomputes, and of speculative decoding.  In particular it is why
+    speculation needs no explicit stream fast-forwarding: a request's
+    position only ever advances by ACCEPTED tokens, and the verify pass
+    re-samples each drafted position with exactly this key, so rejected
+    drafts never consume (or skip) randomness and stochastic outputs stay
+    bit-identical to plain decode.
+
+    keys: (B, key_size) per-row base keys; positions: (B',) int32 with
+    B' == B (pass pre-repeated keys for a flattened (B, P) position grid).
+    """
+    return jax.vmap(jax.random.fold_in)(keys, positions)
+
+
 def sample(cfg: SamplerConfig, logits: jnp.ndarray, key,
            active: jnp.ndarray = None, pad_id: int = 0) -> jnp.ndarray:
     """logits: (B, V) -> token ids (B,).

@@ -1,0 +1,51 @@
+"""Closed-loop jit warmup for the serving engine's prefill retrace space.
+
+Prefill compiles per (admission group size, chunk bucket) shape: the
+closed-loop sections of ``benchmarks.serving_bench`` hit each shape
+naturally before measuring, but an OPEN-LOOP arrival process admits in
+groups of any size from 1 up to ``max_batch`` depending on timing — a
+group size first seen mid-run stalls a scheduler tick on a multi-second
+XLA compile and wrecks both the client latency distribution and the
+circuit breaker's tick clock (the PR 7 follow-up this module fixes:
+``launch/serve.py --frontend async`` used to warm only group size 1).
+
+``warmup_prefill`` drains one tiny closed-loop batch per (group size,
+prompt-length bucket) combination, so every shape the trace can admit is
+already compiled when the clock starts.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+
+def warmup_prefill(engine, vocab_size: int,
+                   prompt_lens: Iterable[int] = (12,),
+                   max_new_tokens: int = 2, seed: int = 99,
+                   reset_stats: bool = True) -> None:
+    """Warm ``engine``'s jit caches for every admission group size.
+
+    For each prompt length in ``prompt_lens`` (deduplicated; pick one
+    representative per chunk bucket the real trace can hit, including any
+    shared-prefix length) and each group size ``1..engine.max_batch``,
+    submit that many uniform random prompts and drain them closed-loop.
+    Also compiles the decode window (and the speculative verify pass when
+    ``spec_decode`` is on — fixed-shape, so one group covers it).
+
+    ``reset_stats``: start the engine's ``EngineStats`` fresh afterwards
+    so warmup traffic never pollutes measured numbers.
+    """
+    from repro.serving.engine import EngineStats
+
+    rng = np.random.default_rng(seed)
+    for n in sorted({int(n) for n in prompt_lens}):
+        if not 0 < n < engine.max_len:
+            continue
+        for g in range(1, engine.max_batch + 1):
+            for _ in range(g):
+                engine.submit(rng.integers(1, vocab_size, size=n),
+                              max_new_tokens=max_new_tokens)
+            engine.run()
+    if reset_stats:
+        engine.stats = EngineStats()

@@ -202,3 +202,31 @@ def test_bench_schema_reports_all_problems_at_once():
         validate_bench(bench)
     msg = str(e.value)
     assert "sclad" in msg and "arch" in msg and "client_p99_itl_s" in msg
+
+
+def test_note_tokens_speculative_window_counts_accepted_only():
+    """The speculative verify pass reports the ACCEPTED token count
+    (anchor + accepted drafts) per host sync — never the proposed count —
+    so each ITL window spreads the sync gap over tokens the client
+    actually received.  A fully-accepted k=4 pass therefore records five
+    gap/5 samples, and a fully-rejected pass one full-gap sample."""
+    eng = _bare_engine()
+    eng._submit_t[3] = 0.0
+    eng._note_tokens(3, 3, 2.0)   # first verify pass: TTFT only
+    eng._note_tokens(3, 5, 3.0)   # anchor + 4 accepted: 5 x 0.2
+    eng._note_tokens(3, 1, 3.5)   # all drafts rejected: 1 x 0.5
+    assert eng.stats.ttft_history == [2.0]
+    assert eng.stats.itl_history == [0.2] * 5 + [0.5]
+    # Had the rejected pass reported PROPOSED (5), the tail would have
+    # been five phantom 0.1s samples — p99 would lie low.
+    assert eng.stats.p99_itl_s == 0.5
+
+
+def test_bench_schema_rejects_acceptance_rate_above_one():
+    bench = _valid_bench()
+    bench["spec_decode"]["repetitive"]["acceptance_rate"] = 1.5
+    with pytest.raises(ValueError, match="rate > 1"):
+        validate_bench(bench)
+    bench = _valid_bench()
+    bench["spec_decode"]["random"]["acceptance_rate"] = 1.0
+    validate_bench(bench)  # inclusive upper bound: exactly 1 is legal

@@ -247,3 +247,108 @@ def test_quantized_store_shares_within_not_across_encoding():
     i8_digests = chain_hashes(content, bs, seed=chain_root_for("int8"))
     assert fp_store.match_digests(i8_digests) == (0, 0)
     assert fp_store.match_prefix(content) == nb  # same-root control
+
+
+def test_truncate_rolls_back_across_block_boundary():
+    """Speculative rollback past a block edge: dropped blocks go to the
+    FREE list (never the LRU pool), the now-partial boundary block is
+    unregistered, and a later commit re-hashes the suffix the lane
+    actually wrote instead of reviving the stale chain."""
+    bs = 4
+    store = BlockStore(num_blocks=8, block_size=bs, num_slots=2,
+                       max_blocks_per_slot=4)
+    content = list(range(1, 11))  # 10 tokens = 2 full blocks + a partial
+    store.admit(0, content)
+    store.grow(0, 10)
+    store.commit_full(0, content)  # registers the 2 full blocks
+    free_before = store.num_free
+    dropped = store.truncate(0, 5)  # rewind into block 1
+    assert len(dropped) == 1  # blocks_for(5) = 2: the partial 3rd freed
+    assert store.seq_len(0) == 5 and store.owned_blocks(0) == 2
+    assert store.num_free == free_before + 1
+    assert store.pooled_blocks == 0, "rolled-back block must not be pooled"
+    b0, b1 = store._blocks[0]
+    assert b0 in store._hash, "untouched full block keeps its digest"
+    assert b1 not in store._hash, (
+        "partial boundary block's tail is rolled-back bytes — digest "
+        "must not bind")
+    assert len(store._chain[0]) == 1  # suffix digests invalidated
+    store.check_invariants()
+    # The lane regrows and writes a DIFFERENT suffix: commit_full hashes
+    # what was written, not the stale pre-rollback chain.
+    store.grow(0, 8)
+    rewritten = content[:5] + [77, 78, 79]
+    store.commit_full(0, rewritten)
+    assert store._chain[0] == chain_hashes(rewritten, bs)
+    assert store._hash[b1] == store._chain[0][1]
+    store.check_invariants()
+
+
+def test_truncate_shared_boundary_block_leaves_donor_intact():
+    """Rolling back INTO a shared block never mutates it: the COW barrier
+    guarantees this lane never wrote it, so its registration and every
+    other owner's view survive."""
+    bs = 4
+    store = BlockStore(num_blocks=8, block_size=bs, num_slots=2,
+                       max_blocks_per_slot=3)
+    content = list(range(1, 9))  # exactly 2 full blocks
+    store.admit(0, content)
+    store.grow(0, 8)
+    store.commit_full(0, content)
+    assert store.admit(1, content) == 8  # full prefix hit: shares both
+    donor = list(store._blocks[0])
+    store.grow(1, 10)  # lane 1 drafts into a 3rd, exclusive block
+    dropped = store.truncate(1, 6)  # reject the draft: rewind mid-block 1
+    assert len(dropped) == 1  # only the exclusive draft block freed
+    assert store._blocks[1] == donor, "rollback must not swap shared blocks"
+    assert store.ref_count(donor[1]) == 2
+    assert donor[1] in store._hash, (
+        "shared boundary block keeps its digest — its content still "
+        "matches (this lane never wrote it)")
+    assert store.seq_len(0) == 8 and store.seq_len(1) == 6
+    store.check_invariants()
+    store.release(0)
+    # Donor's view was truly untouched: its full chain still matches.
+    assert store.match_prefix(content) == 2
+    store.check_invariants()
+
+
+def test_truncate_dropped_digest_cannot_revive_stale_prefix():
+    """A REGISTERED block rolled back wholly out of a lane is freed and
+    unregistered: a new request with the identical content must re-hit
+    only the surviving prefix, never the dropped block's stale digest."""
+    bs = 4
+    store = BlockStore(num_blocks=6, block_size=bs, num_slots=2,
+                       max_blocks_per_slot=2)
+    content = list(range(1, 9))
+    store.admit(0, content)
+    store.grow(0, 8)
+    store.commit_full(0, content)  # both blocks registered
+    dropped = store.truncate(0, 4)  # second (registered) block dropped
+    assert len(dropped) == 1
+    assert store.match_prefix(content) == 1, (
+        "dropped block's digest must leave the prefix index")
+    cached = store.admit(1, content)
+    assert cached == 4  # only block 0 revives; the tail re-prefills
+    store.check_invariants()
+    # Rewind-to-zero edge: every block freed, slot stays admitted.
+    store.truncate(1, 0)
+    assert store.seq_len(1) == 0 and store.owned_blocks(1) == 0
+    store.check_invariants()
+    store.release(1)
+    store.check_invariants()
+
+
+def test_truncate_validates_slot_and_length():
+    store = BlockStore(num_blocks=4, block_size=2, num_slots=2,
+                       max_blocks_per_slot=2)
+    store.admit(0)
+    store.grow(0, 3)
+    with pytest.raises(ValueError):
+        store.truncate(1, 0)  # not admitted
+    with pytest.raises(ValueError):
+        store.truncate(0, 4)  # beyond grown length
+    with pytest.raises(ValueError):
+        store.truncate(0, -1)
+    assert store.truncate(0, 3) == []  # no-op keeps everything
+    store.check_invariants()

@@ -8,7 +8,10 @@ they run even without hypothesis; these traces sweep the state space:
     (the free/pool/live partition in ``check_invariants``);
   * prefix sharing is sound: lanes share block ``i`` only when their
     contents agree on every token through block ``i``;
-  * release (the preemption path) frees exactly the non-shared blocks.
+  * release (the preemption path) frees exactly the non-shared blocks;
+  * truncate (the speculative-rollback path) frees exactly the exclusive
+    over-length blocks — never into the LRU pool — and live-block
+    accounting stays exact under arbitrary truncate/grow interleavings.
 """
 import pytest
 
@@ -26,9 +29,9 @@ from paged_invariants import shared_prefix_sound as _shared_prefix_sound
 @settings(max_examples=60, deadline=None)
 @given(st.data())
 def test_random_traces_preserve_invariants(data):
-    """Drive a random admit/grow/commit/cow/release trace over a tiny token
-    alphabet (so prefix collisions actually happen); check every invariant
-    after every operation."""
+    """Drive a random admit/grow/commit/cow/truncate/release trace over a
+    tiny token alphabet (so prefix collisions actually happen); check every
+    invariant after every operation."""
     num_blocks = data.draw(st.integers(2, 24), label="num_blocks")
     bs = data.draw(st.integers(1, 4), label="block_size")
     num_slots = data.draw(st.integers(1, 5), label="num_slots")
@@ -39,7 +42,7 @@ def test_random_traces_preserve_invariants(data):
     lens = {}      # slot -> grown length (mirror)
     for _ in range(data.draw(st.integers(1, 50), label="n_ops")):
         op = data.draw(st.sampled_from(
-            ["admit", "grow", "commit", "cow", "release"]))
+            ["admit", "grow", "commit", "cow", "truncate", "release"]))
         if op == "admit":
             free_slots = [s for s in range(num_slots) if s not in lens]
             if not free_slots:
@@ -90,6 +93,23 @@ def test_random_traces_preserve_invariants(data):
                     assert store._blocks[s] == b
                     assert dst not in b
                 assert store.ref_count(dst) == 1
+        elif op == "truncate" and lens:
+            slot = data.draw(st.sampled_from(sorted(lens)))
+            new_len = data.draw(st.integers(0, lens[slot]), label="new_len")
+            owned = list(store._blocks[slot])
+            refs = {b: store.ref_count(b) for b in owned}
+            cut = owned[store.blocks_for(new_len):]
+            dropped = store.truncate(slot, new_len)
+            # Exactly the exclusive over-length blocks are freed — and a
+            # rolled-back block never lands in the LRU pool (its tail
+            # bytes are untrusted; a stale digest must not revive it).
+            assert sorted(dropped) == sorted(
+                b for b in cut if refs[b] == 1)
+            assert all(b not in store._pool for b in dropped)
+            for b in cut:
+                if refs[b] > 1:
+                    assert store.ref_count(b) == refs[b] - 1
+            lens[slot] = new_len
         elif op == "release" and lens:
             slot = data.draw(st.sampled_from(sorted(lens)))
             before = {b: store.ref_count(b) for b in store._blocks[slot]}

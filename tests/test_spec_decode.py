@@ -1,0 +1,267 @@
+"""Speculative multi-token decoding: draft -> one-pass verify -> rollback.
+
+The engine contract under test (``ServingEngine(spec_decode="ngram")``):
+
+  * emitted tokens are BIT-IDENTICAL to ``spec_decode="off"`` on the jnp
+    reference attention path, for greedy AND stochastic sampling, across
+    the serving matrix — dense/moe/vlm, prefix cache on/off, chunked
+    prefill, preemption under a tight pool, quantized (int8 SCLAD) pools,
+    ``decode_steps > 1`` on the plain engine, and every ``spec_k``;
+  * the PRNG fast-forward rule: a request's position advances only by
+    ACCEPTED tokens and every verify position re-samples with its
+    positional key (``sampler.positional_keys``), so rejected drafts
+    never consume or skip randomness;
+  * rejected drafts roll their optimistically-written K/V back through
+    ``BlockStore.truncate`` — pool invariants must hold after every run;
+  * under ``attn_kernel="on"`` decode-position scoring moves from the
+    flash-decode kernel to the flash-prefill kernel, whose online-softmax
+    tiling differs — spec-vs-off there is a CROSS-KERNEL comparison and
+    (like kernel-vs-reference) is a tolerance property, not a bitwise
+    one; what must still hold bitwise are the scheduling invariants
+    WITHIN the speculative configuration (pinned below).
+
+The (spec_k x chunk-size x preemption) sweep is ``slow``-marked for the
+nightly tier; the fast tier pins one representative of each axis.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+from repro.serving.sampler import SamplerConfig
+from repro.serving.spec import NgramProposer, make_proposer
+
+MAX_LEN = 32
+
+
+def _make(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return _make("tinyllama-1.1b")
+
+
+def _requests(cfg, n=3, seed=0, budgets=(6, 8, 5)):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, cfg.vocab_size, size=int(rng.integers(4, 12))),
+             budgets[i % len(budgets)]) for i in range(n)]
+
+
+def _run(cfg, params, reqs, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("eos_id", -1)
+    eng = ServingEngine(cfg, params, **kw)
+    uids = [eng.submit(p, max_new_tokens=m) for p, m in reqs]
+    out = eng.run()
+    eng._alloc.check_invariants()
+    return [out[u] for u in uids], eng.stats
+
+
+# -- the draft proposer alone --------------------------------------------
+
+
+def test_ngram_proposer_suffix_match():
+    """The proposer continues the RIGHTMOST earlier occurrence of the
+    longest matching suffix n-gram (n from max_n down to min_n),
+    preferring occurrences with a full k tokens of continuation."""
+    p = NgramProposer(max_n=3, min_n=1)
+    #           0  1  2  3  4  5  6  7
+    history = [5, 6, 7, 9, 5, 6, 7, 2]
+    # suffix (6, 7, 2): no earlier occurrence; (7, 2): none; (2,): none.
+    assert p.propose(history, 4) == []
+    # suffix (5, 6, 7) at the end matches positions 0-2 -> continues [9, ...]
+    assert p.propose([5, 6, 7, 9, 5, 6, 7], 3) == [9, 5, 6]
+    # k caps the continuation
+    assert p.propose([5, 6, 7, 9, 5, 6, 7], 1) == [9]
+    # rightmost match wins: ... 1 2 [8] ... 1 2 [4] | 1 2 -> 4, not 8
+    assert p.propose([1, 2, 8, 1, 2, 4, 1, 2], 1) == [4]
+    # unigram fallback (min_n=1): last token seen before -> its successor
+    assert p.propose([3, 9, 3], 2) == [9, 3]
+    # with-room preference: on a period-1 cycle the match flush against
+    # the end offers a 1-token draft; an occurrence k earlier replays a
+    # full k tokens of the same cycle.
+    assert p.propose([7] * 6, 3) == [7, 7, 7]
+    # ...but a short continuation is still better than none (fallback).
+    assert p.propose([5, 6, 2, 5, 6], 4) == [2, 5, 6]
+    # degenerate histories
+    assert p.propose([], 4) == []
+    assert p.propose([7], 4) == []
+    assert p.propose([7, 7], 0) == []
+
+
+def test_make_proposer():
+    assert make_proposer("off") is None
+    assert isinstance(make_proposer("ngram"), NgramProposer)
+    with pytest.raises(ValueError):
+        make_proposer("oracle")
+
+
+def test_spec_constructor_validation(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, spec_decode="oracle")
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, spec_decode="ngram", spec_k=0)
+    with pytest.raises(ValueError):
+        ServingEngine(cfg, params, mode="wave", spec_decode="ngram")
+
+
+# -- bit-identity on the reference path ----------------------------------
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen2-moe-a2.7b",
+                                  "internvl2-26b"])
+def test_spec_bit_identical_across_archs(arch):
+    """dense / moe / vlm: greedy outputs must not move, and the verify
+    pass must actually batch tokens (fewer host-synced decode steps than
+    tokens generated)."""
+    cfg, params = _make(arch)
+    reqs = _requests(cfg)
+    off, s_off = _run(cfg, params, reqs)
+    on, s_on = _run(cfg, params, reqs, spec_decode="ngram", spec_k=4)
+    assert on == off
+    assert s_on.generated_tokens == s_off.generated_tokens
+    assert s_on.spec_passes > 0
+    assert 0.0 <= s_on.spec_acceptance_rate <= 1.0
+    # Each verify pass emits >= 1 token per live lane, so spec never needs
+    # MORE host-synced steps than plain decode (strictly fewer once the
+    # critical-path lane accepts a draft).
+    assert s_on.decode_steps <= s_off.decode_steps
+
+
+@pytest.mark.parametrize("knobs", [
+    {"prefix_cache": False},
+    {"prefill_chunk": 4, "block_size": 4},
+    {"kv_dtype": "int8"},
+    {"num_blocks": 8, "block_size": 4},  # tight pool: preemption + spec
+    {"sampler": SamplerConfig(temperature=0.8, top_k=10)},
+    {"spec_k": 1},
+    {"spec_k": 2},
+], ids=["prefix_off", "chunked", "int8", "preempt", "stochastic",
+        "spec_k1", "spec_k2"])
+def test_spec_bit_identical_knob_matrix(tiny, knobs):
+    """Every scheduling/sampling knob crossed with speculation on the
+    reference path.  The stochastic case is the PRNG fast-forward pin:
+    temperature sampling accepts ~no drafts, yet outputs stay identical
+    because positions only advance by accepted tokens."""
+    cfg, params = tiny
+    knobs = dict(knobs)
+    spec_k = knobs.pop("spec_k", 4)
+    reqs = _requests(cfg, seed=3)
+    off, s_off = _run(cfg, params, reqs, **knobs)
+    on, s_on = _run(cfg, params, reqs, spec_decode="ngram", spec_k=spec_k,
+                    **knobs)
+    assert on == off
+    if "num_blocks" in knobs:
+        assert s_on.preemptions >= 1, "tight pool should preempt under spec"
+    if "sampler" in knobs:
+        # Random samples essentially never equal a history-matched draft.
+        assert s_on.spec_acceptance_rate <= 0.2
+
+
+def test_spec_bit_identical_vs_decode_steps_window(tiny):
+    """Plain decode with ``decode_steps > 1`` (the windowed host-sync
+    amortization) and speculative decode must agree token-for-token —
+    both are multi-token-per-sync schedules over the same sampling rule."""
+    cfg, params = tiny
+    reqs = _requests(cfg, seed=5)
+    off, _ = _run(cfg, params, reqs, decode_steps=3)
+    on, _ = _run(cfg, params, reqs, spec_decode="ngram", spec_k=4)
+    assert on == off
+
+
+def test_spec_budget_edges_and_eos_inside_draft(tiny):
+    """A lane's chunk clamps to its remaining budget (max_new=1 admits no
+    drafts at all), and an EOS landing INSIDE an accepted draft prefix
+    retires the request exactly where plain decode would."""
+    cfg, params = tiny
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n) for n in (5, 8)]
+    for budget in (1, 2):
+        reqs = [(p, budget) for p in prompts]
+        off, _ = _run(cfg, params, reqs)
+        on, _ = _run(cfg, params, reqs, spec_decode="ngram", spec_k=4)
+        assert on == off
+        assert all(len(t) == budget for t in on)
+    # Pick the token plain decode emits mid-stream as EOS and rerun: both
+    # paths must stop at its first occurrence.
+    reqs = [(p, 8) for p in prompts]
+    off, _ = _run(cfg, params, reqs)
+    eos = off[0][3]
+    off_eos, _ = _run(cfg, params, reqs, eos_id=eos)
+    on_eos, _ = _run(cfg, params, reqs, eos_id=eos, spec_decode="ngram",
+                     spec_k=4)
+    assert on_eos == off_eos
+    assert off_eos[0][-1] == eos
+    assert len(off_eos[0]) == off[0].index(eos) + 1
+
+
+def test_spec_stats_accounting(tiny):
+    """Counter relations: one verify pass per step, acceptance bounded by
+    proposals, and rejected drafts prove the truncate rollback ran."""
+    cfg, params = tiny
+    reqs = _requests(cfg, seed=7, budgets=(8, 8, 8))
+    on, s = _run(cfg, params, reqs, spec_decode="ngram", spec_k=4)
+    assert s.spec_passes == s.decode_steps > 0
+    assert 0 <= s.spec_accepted <= s.spec_proposed
+    assert s.generated_tokens == sum(len(t) for t in on)
+    # Random-prompt greedy rejects some drafts -> the rollback path ran
+    # (and _run's check_invariants already held after it).
+    assert s.spec_proposed > s.spec_accepted
+
+
+# -- kernel path: scheduling invariants within the spec configuration ----
+
+
+def test_spec_kernel_scheduling_invariants(tiny):
+    """Under ``attn_kernel="on"`` spec-vs-off is a cross-kernel tolerance
+    property (see module docstring) — what must stay BITWISE is the
+    scheduler under speculation: prefix sharing on vs off cannot move a
+    token when both runs speculate through the kernels."""
+    cfg, params = tiny
+    rng = np.random.default_rng(11)
+    system = rng.integers(1, cfg.vocab_size, size=8)
+    reqs = [(np.concatenate([system,
+                             rng.integers(1, cfg.vocab_size, size=4)]), 6)
+            for _ in range(3)]
+    # max_batch=2 staggers the third request behind a retirement, so its
+    # admission revives the donor's pooled prefix blocks (a guaranteed
+    # cache hit — concurrent same-round admissions may not see one).
+    kw = dict(attn_kernel="on", spec_decode="ngram", spec_k=4,
+              block_size=4, prefill_chunk=8, max_batch=2)
+    on_cache, s_cache = _run(cfg, params, reqs, **kw)
+    no_cache, _ = _run(cfg, params, reqs, prefix_cache=False, **kw)
+    assert on_cache == no_cache
+    assert s_cache.prefix_hit_rate > 0
+    assert s_cache.spec_passes > 0
+
+
+# -- nightly sweep -------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "qwen2-moe-a2.7b"])
+@pytest.mark.parametrize("spec_k", [1, 2, 4])
+@pytest.mark.parametrize("block_size,chunk", [(4, 4), (8, 16)])
+@pytest.mark.parametrize("pool", ["ample", "tight"])
+def test_spec_matrix_sweep(arch, spec_k, block_size, chunk, pool):
+    """(spec_k x chunk-size x preemption) x {dense, moe}: the full
+    reference-path bit-identity sweep."""
+    cfg, params = _make(arch)
+    reqs = _requests(cfg, seed=13)
+    kw = dict(block_size=block_size, prefill_chunk=chunk)
+    if pool == "tight":
+        kw["num_blocks"] = 10 if block_size == 4 else 6
+    off, _ = _run(cfg, params, reqs, **kw)
+    on, s_on = _run(cfg, params, reqs, spec_decode="ngram", spec_k=spec_k,
+                    **kw)
+    assert on == off
+    if pool == "tight":
+        assert s_on.preemptions >= 1
