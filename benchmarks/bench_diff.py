@@ -5,7 +5,22 @@ committed artifact (the baseline the repo ships) next to the fresh run,
 so a PR's perf movement is visible in the job log without gating merges
 on CPU-runner timing noise.  Numeric leaves print old -> new with the
 absolute and relative delta; non-numeric leaves print only when they
-changed; keys present on one side only are listed as added/removed.
+changed.
+
+Artifact versions drift across PRs — a new bench section lands, an old
+one is renamed — so keys present on one side only must never crash the
+report or drown it: a top-level section present on only ONE side is
+collapsed to a single ``(section added/removed: N keys)`` line instead
+of one line per leaf, and stray added/removed leaves inside shared
+sections are listed individually.
+
+The report ends with a ONE-LINE regression summary classifying every
+changed numeric leaf by metric direction (higher-is-better:
+``tokens_per_s`` / ``goodput`` / ``hit_rate`` / ``acceptance_rate`` /
+``concurrency`` / ``speedup``; lower-is-better: ``ttft`` / ``itl`` /
+other ``*_s`` latencies — SLO *configs* and counters are skipped), e.g.
+
+  bench_diff summary: 7 improved, 2 regressed (worst: open_loop.moderate.client_p99_ttft_s +41.3%), 5 other changes
 
   PYTHONPATH=src python -m benchmarks.bench_diff BENCH_serving.json /tmp/fresh.json
 """
@@ -29,24 +44,94 @@ def _is_num(x):
     return isinstance(x, (int, float)) and not isinstance(x, bool)
 
 
-def diff_lines(old: dict, new: dict) -> list[str]:
-    """One line per changed/added/removed leaf, sorted by path."""
+# Metric-direction heuristics for the regression summary.  Checked in
+# order: a throughput rate like "goodput_req_s" is higher-is-better even
+# though it ends in "_s".
+_HIGHER = ("tokens_per_s", "goodput", "hit_rate", "acceptance_rate",
+           "concurrency", "speedup")
+_LOWER = ("ttft", "itl")
+
+
+def _direction(path: str):
+    """'higher' / 'lower' for perf-relevant leaves, None for the rest
+    (counters, configs, SLO targets)."""
+    leaf = path.rsplit(".", 1)[-1]
+    if leaf.startswith("slo_"):
+        return None  # the SLO target is config, not a measurement
+    if any(t in path for t in _HIGHER):
+        return "higher"
+    if any(t in path for t in _LOWER) or leaf.endswith("_s"):
+        return "lower"
+    return None
+
+
+def diff_report(old: dict, new: dict) -> tuple[list[str], str]:
+    """(per-leaf lines sorted by path, one-line regression summary).
+
+    Whole sections (top-level keys) present on one side only collapse to
+    a single added/removed line; their leaves never enter the summary —
+    a section that didn't exist in the baseline cannot have regressed.
+    """
     a, b = _leaves(old), _leaves(new)
+    removed_secs = {k for k in old if isinstance(old, dict)} - set(new)
+    added_secs = {k for k in new if isinstance(new, dict)} - set(old)
     lines = []
+    improved, regressed, other = [], [], 0
+    for sec in sorted(removed_secs):
+        n = sum(1 for p in a if p == sec or p.startswith(sec + "."))
+        lines.append(f"- {sec}.* (section removed: {n} keys)")
+    for sec in sorted(added_secs):
+        n = sum(1 for p in b if p == sec or p.startswith(sec + "."))
+        lines.append(f"+ {sec}.* (section added: {n} keys)")
+
+    def in_lone_section(path):
+        top = path.split(".", 1)[0]
+        return top in removed_secs or top in added_secs
+
     for path in sorted(a.keys() | b.keys()):
+        if in_lone_section(path):
+            continue
         if path not in b:
             lines.append(f"- {path}: {a[path]!r} (removed)")
+            other += 1
         elif path not in a:
             lines.append(f"+ {path}: {b[path]!r} (added)")
+            other += 1
         elif _is_num(a[path]) and _is_num(b[path]):
             o, n = a[path], b[path]
             if o == n:
                 continue
             rel = f" ({(n - o) / o:+.1%})" if o else ""
             lines.append(f"~ {path}: {o:g} -> {n:g} [{n - o:+g}]{rel}")
+            d = _direction(path)
+            if d is None or not o:
+                other += 1
+                continue
+            better = (n > o) if d == "higher" else (n < o)
+            frac = abs(n - o) / abs(o)
+            (improved if better else regressed).append((frac, path, o, n))
         elif a[path] != b[path]:
             lines.append(f"~ {path}: {a[path]!r} -> {b[path]!r}")
-    return lines
+            other += 1
+
+    if not (improved or regressed or other):
+        summary = "bench_diff summary: no perf-relevant movement"
+    elif regressed:
+        frac, path, o, n = max(regressed)
+        sign = "+" if n > o else "-"
+        summary = (f"bench_diff summary: {len(improved)} improved, "
+                   f"{len(regressed)} regressed "
+                   f"(worst: {path} {sign}{frac:.1%}), "
+                   f"{other} other changes")
+    else:
+        summary = (f"bench_diff summary: {len(improved)} improved, "
+                   f"0 regressed, {other} other changes")
+    return lines, summary
+
+
+def diff_lines(old: dict, new: dict) -> list[str]:
+    """Back-compat wrapper: just the per-leaf lines."""
+    return diff_report(old, new)[0]
 
 
 def main():
@@ -59,7 +144,7 @@ def main():
         old = json.load(f)
     with open(args.new) as f:
         new = json.load(f)
-    lines = diff_lines(old, new)
+    lines, summary = diff_report(old, new)
     if not lines:
         print("bench_diff: no differences")
         return
@@ -67,6 +152,7 @@ def main():
           f"({args.old} -> {args.new})")
     for line in lines:
         print(f"  {line}")
+    print(summary)
 
 
 if __name__ == "__main__":

@@ -81,6 +81,20 @@ CPU config:
        asserted bit-identical — the verify pass re-samples each position
        with its positional key, so randomness never skews).
 
+8. SCALE-OUT probe (PR 9): both rungs of the scale ladder.
+     * sharded dispatch — a SUBPROCESS (``benchmarks.sharded_probe``)
+       forces 2 host devices, shards the paged KV pool's kv-head axis
+       over the "model" mesh axis via shard_map, and asserts greedy
+       tokens + scheduler stats identical to the meshless engine
+       (float32 params; bf16 TP psum noise flips greedy near-ties);
+     * replica router — a shared-system-prompt open-loop trace through
+       2 ``ReplicaRouter`` replicas: prefix-affinity placement must beat
+       round-robin on aggregate prefix hit-rate (asserted — affinity
+       pays ONE cold shared prefill, round-robin one per replica),
+       completed streams are asserted bit-identical to a solo engine's
+       closed-loop ``run()``, and aggregate goodput is reported next to
+       a 1-replica baseline.
+
 Reported: decode tokens/s, prefill tokens/s, mean TTFT, lane occupancy,
 mean concurrent requests, KV token utilization (can exceed 1.0 under
 sharing — lanes serve more context than the pool stores), prefix hit-rate
@@ -109,6 +123,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 from dataclasses import replace as dc_replace
 
 import jax
@@ -121,9 +138,10 @@ from repro.models import model as M
 from repro.serving.engine import EngineStats, ServingEngine
 from repro.serving.frontend import CircuitBreaker
 from repro.serving.openloop import TraceItem, poisson_trace, run_open_loop
+from repro.serving.router import run_open_loop_router
 from repro.serving.sampler import SamplerConfig
 from repro.serving.spec import SPEC_DECODE_MODES
-from repro.serving.warmup import warmup_prefill
+from repro.serving.warmup import trace_prompt_lens, warmup_prefill
 
 ARCH = "tinyllama-1.1b"
 MAX_LEN = 64
@@ -219,7 +237,11 @@ def _open_loop_section(cfg, params, trace, engine_kwargs, breaker,
     """
     eng = ServingEngine(cfg, params, max_len=MAX_LEN, eos_id=-1,
                         **engine_kwargs)
-    warmup_prefill(eng, cfg.vocab_size)
+    # The (group size, chunk bucket) coverage rule lives in ONE place
+    # (serving.warmup.trace_prompt_lens) and is shared with
+    # ``launch.serve --frontend async`` — see satellite note there.
+    warmup_prefill(eng, cfg.vocab_size,
+                   prompt_lens=trace_prompt_lens(trace, eng))
     report = run_open_loop(eng, trace, max_queue_depth=max_queue_depth,
                            breaker=breaker)
     # Bit-identity on the non-shed requests vs the in-process run() path.
@@ -301,6 +323,22 @@ BENCH_SCHEMA = [
     ("spec_decode.random.decode_tokens_per_s_on", _NUM),
     ("spec_decode.random.decode_tokens_per_s_off", _NUM),
     ("spec_decode.random.outputs_identical", bool),
+    ("scale_out.sharded.devices", int),
+    ("scale_out.sharded.model_parallel", int),
+    ("scale_out.sharded.requests", int),
+    ("scale_out.sharded.single_decode_tokens_per_s", _NUM),
+    ("scale_out.sharded.sharded_decode_tokens_per_s", _NUM),
+    ("scale_out.sharded.greedy_identical", bool),
+    ("scale_out.sharded.stats_identical", bool),
+    ("scale_out.router.replicas", int),
+    ("scale_out.router.affinity.prefix_hit_rate", _NUM),
+    ("scale_out.router.affinity.affinity_hit_rate", _NUM),
+    ("scale_out.router.affinity.per_replica_requests", list),
+    ("scale_out.router.affinity.goodput_req_s", _NUM),
+    ("scale_out.router.round_robin.prefix_hit_rate", _NUM),
+    ("scale_out.router.round_robin.goodput_req_s", _NUM),
+    ("scale_out.router.single.goodput_req_s", _NUM),
+    ("scale_out.router.streams_identical_to_solo", bool),
 ]
 
 
@@ -652,6 +690,107 @@ def run(smoke: bool = False, json_path: str | None = None,
                  f"tok_s_off={s_rand_off.tokens_per_s:.2f} "
                  f"outputs_identical=True"))
 
+    # -- 8. scale-out: sharded dispatch + prefix-affinity replica router -----
+    # Rung 1 (tensor scale-up) runs in a SUBPROCESS: jax fixes the device
+    # topology at import time and this process owns one CPU device, so
+    # ``benchmarks.sharded_probe`` forces 2 host devices before its jax
+    # import, runs one trace through a meshless engine and one whose
+    # paged pool (payload + SCLAD scales) is shard_map-sharded over the
+    # "model" axis, and prints a single JSON line.  float32 params inside
+    # the probe (bf16 TP psum reduction order flips greedy near-ties);
+    # greedy tokens AND scheduler stats must match the single-device
+    # engine exactly.  Timing is CPU parity-path cost, not a speed claim.
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.pop("XLA_FLAGS", None)  # the probe forces its own device count
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sharded_probe",
+         "--model-parallel", "2", "--requests", str(4 if smoke else 6),
+         "--max-new", "4", "--kv-dtype", "fp"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"sharded_probe failed (rc={proc.returncode}):\n"
+        f"{proc.stdout}\n{proc.stderr}")
+    shard = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert shard["greedy_identical"], "sharded dispatch changed greedy"
+    assert shard["stats_identical"], "sharded dispatch changed scheduling"
+    rows.append(("serving/scale_out/sharded", 0.0,
+                 f"mp={shard['model_parallel']} "
+                 f"tok_s_single={shard['single']['decode_tokens_per_s']:.1f} "
+                 f"tok_s_sharded={shard['sharded']['decode_tokens_per_s']:.1f} "
+                 f"greedy_identical=True stats_identical=True"))
+
+    # Rung 2 (data-parallel scale-out): the SAME shared-system-prompt
+    # open-loop trace through 2 replicas under prefix-affinity routing vs
+    # round-robin, plus a 1-replica baseline for aggregate goodput.
+    # Affinity converges shared-prefix traffic onto the replica already
+    # holding its blocks (block pools do not gossip), so the fleet pays
+    # ONE cold shared prefill where round-robin pays one per replica —
+    # the aggregate prefix hit-rate gap asserted below.  The arrival rate
+    # is moderate on purpose: affinity needs the first request's blocks
+    # COMMITTED before later arrivals route (a burst outrunning prefill
+    # would make every placement cold and the policies identical).
+    rt_n = 12 if smoke else 20
+    rt_prefix = np.random.default_rng(21).integers(
+        1, cfg.vocab_size, size=24)
+    rt_trace = poisson_trace(
+        np.random.default_rng(22), rt_n, rate_req_s=5.0,
+        vocab=cfg.vocab_size, prompt_len=(4, 8), budget=(3, 5),
+        shared_prefix=rt_prefix, prefix_fraction=0.75)
+    rt_pool = dict(mode="continuous", max_batch=4, block_size=8,
+                   num_blocks=48, prefill_chunk=16, prefix_cache=True)
+
+    def rt_engines(n):
+        engines = []
+        for _ in range(n):
+            e = ServingEngine(cfg, params, max_len=MAX_LEN, eos_id=-1,
+                              **rt_pool)
+            warmup_prefill(e, cfg.vocab_size,
+                           prompt_lens=trace_prompt_lens(
+                               rt_trace, e, extra=(len(rt_prefix),)))
+            engines.append(e)
+        return engines
+
+    aff_rep, aff_router = run_open_loop_router(
+        rt_engines(2), rt_trace, policy="affinity", max_queue_depth=rt_n)
+    rr_rep, rr_router = run_open_loop_router(
+        rt_engines(2), rt_trace, policy="round_robin",
+        max_queue_depth=rt_n)
+    one_rep, _ = run_open_loop_router(
+        rt_engines(1), rt_trace, policy="affinity", max_queue_depth=rt_n)
+    aff, rr = aff_router.routing_report(), rr_router.routing_report()
+    assert aff["prefix_hit_rate"] > rr["prefix_hit_rate"], (
+        f"prefix-affinity routing must beat round-robin on aggregate "
+        f"prefix hit-rate (affinity={aff['prefix_hit_rate']:.3f} "
+        f"round_robin={rr['prefix_hit_rate']:.3f})")
+    # The router never touches tokens: every completed affinity stream is
+    # bit-identical to the same prompt through a closed-loop solo engine.
+    ref = ServingEngine(cfg, params, max_len=MAX_LEN, eos_id=-1,
+                        **rt_pool)
+    rt_done = [(it, rec) for it, rec in zip(rt_trace, aff_rep.records)
+               if rec.status == "completed"]
+    rt_uids = [ref.submit(it.prompt, max_new_tokens=it.max_new_tokens)
+               for it, _ in rt_done]
+    rt_ref_out = ref.run()
+    for uid, (it, rec) in zip(rt_uids, rt_done):
+        assert rec.tokens == rt_ref_out[uid], (
+            "routed stream diverged from solo-engine greedy")
+    slo = 30.0
+    aff_sum = aff_rep.summary(slo)
+    rr_sum = rr_rep.summary(slo)
+    one_sum = one_rep.summary(slo)
+    rows.append(("serving/scale_out/router", 0.0,
+                 f"replicas=2 "
+                 f"hit_aff={aff['prefix_hit_rate']:.2f} "
+                 f"hit_rr={rr['prefix_hit_rate']:.2f} "
+                 f"affinity_hit_rate={aff['affinity_hit_rate']:.2f} "
+                 f"per_replica={aff['per_replica_requests']} "
+                 f"goodput2={aff_sum['goodput']['goodput_req_s']:.2f}req/s "
+                 f"goodput1={one_sum['goodput']['goodput_req_s']:.2f}req/s "
+                 f"streams_identical=True"))
+
     # -- machine-readable summary (CI artifact) ------------------------------
     bench.update({
         "decode_tokens_per_s": {m: stats[m].tokens_per_s for m in stats},
@@ -746,6 +885,56 @@ def run(smoke: bool = False, json_path: str | None = None,
                 "decode_tokens_per_s_on": s_rand_on.tokens_per_s,
                 "decode_tokens_per_s_off": s_rand_off.tokens_per_s,
                 "outputs_identical": True,
+            },
+        },
+        # Scale-out posture (PR 9): rung 1 = shard_map'd paged kernels
+        # over the "model" mesh axis (subprocess probe, forced host
+        # devices), rung 2 = replica router with prefix-affinity
+        # placement vs round-robin vs one replica.
+        "scale_out": {
+            "sharded": {
+                "devices": shard["devices"],
+                "model_parallel": shard["model_parallel"],
+                "requests": shard["requests"],
+                "kv_dtype": shard["kv_dtype"],
+                "single_decode_tokens_per_s":
+                    shard["single"]["decode_tokens_per_s"],
+                "sharded_decode_tokens_per_s":
+                    shard["sharded"]["decode_tokens_per_s"],
+                "single_prefill_tokens_per_s":
+                    shard["single"]["prefill_tokens_per_s"],
+                "sharded_prefill_tokens_per_s":
+                    shard["sharded"]["prefill_tokens_per_s"],
+                "greedy_identical": shard["greedy_identical"],
+                "stats_identical": shard["stats_identical"],
+                "note": shard["note"],
+            },
+            "router": {
+                "replicas": 2,
+                "trace_requests": rt_n,
+                "shared_prefix_tokens": int(len(rt_prefix)),
+                "affinity": {
+                    "prefix_hit_rate": aff["prefix_hit_rate"],
+                    "affinity_hit_rate": aff["affinity_hit_rate"],
+                    "spillovers": aff["spillovers"],
+                    "per_replica_requests": aff["per_replica_requests"],
+                    "completed": aff_sum["completed"],
+                    "goodput_req_s":
+                        aff_sum["goodput"]["goodput_req_s"],
+                },
+                "round_robin": {
+                    "prefix_hit_rate": rr["prefix_hit_rate"],
+                    "per_replica_requests": rr["per_replica_requests"],
+                    "completed": rr_sum["completed"],
+                    "goodput_req_s":
+                        rr_sum["goodput"]["goodput_req_s"],
+                },
+                "single": {
+                    "completed": one_sum["completed"],
+                    "goodput_req_s":
+                        one_sum["goodput"]["goodput_req_s"],
+                },
+                "streams_identical_to_solo": True,
             },
         },
     })

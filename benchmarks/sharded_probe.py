@@ -1,0 +1,144 @@
+"""Sharded-vs-single paged-serving parity probe (subprocess half of
+``benchmarks.serving_bench`` section 8).
+
+Runs in its OWN process because the device topology is decided at jax
+import time: this module forces ``--xla_force_host_platform_device_count``
+BEFORE importing jax, builds a (1, model_parallel) ("data", "model") mesh,
+and times the SAME request trace through a meshless reduced engine and one
+whose paged KV pool (payload + SCLAD scale leaves) is shard_map-sharded
+over ``model`` — the PR-9 tensor scale-up rung.  float32 params so TP
+psum reduction-order noise cannot flip a greedy argmax (the parity
+contract; see tests/test_sharded_dispatch.py for the full matrix).
+
+Prints ONE machine-readable JSON line on stdout:
+
+  {"devices": 2, "model_parallel": 2, "requests": 6, "kv_dtype": "fp",
+   "single": {"decode_tokens_per_s": ..., "prefill_tokens_per_s": ...},
+   "sharded": {...}, "greedy_identical": true, "stats_identical": true}
+
+Run directly (the bench invokes it with the same flags):
+  PYTHONPATH=src python -m benchmarks.sharded_probe \
+      [--model-parallel 2] [--requests 6] [--kv-dtype fp]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model-parallel", type=int, default=2,
+                    help="model-axis mesh size (forced host device count)")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"],
+                    help="pool encoding: int8 shards scale leaves too")
+    return ap.parse_args(argv)
+
+
+def _force_devices(n: int) -> None:
+    """Must run before the first jax import in this process."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def run(model_parallel: int = 2, requests: int = 6, max_new: int = 6,
+        kv_dtype: str = "fp") -> dict:
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    from repro.serving.engine import EngineStats, ServingEngine
+
+    if len(jax.devices()) < model_parallel:
+        raise RuntimeError(
+            f"need {model_parallel} devices, have {len(jax.devices())} — "
+            f"run this module as its own process (jax was imported before "
+            f"the device count was forced)")
+
+    # num_kv_heads must divide by the mesh or the dispatch gate
+    # (sharding.attn_shard_size) falls back to the single-device path
+    # and the probe would measure nothing.
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                              num_heads=max(4, model_parallel),
+                              num_kv_heads=model_parallel)
+    if kv_dtype != "fp":
+        cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
+    params = jax.tree.map(lambda x: x.astype(jax.numpy.float32),
+                          M.init_params(cfg, jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(3)
+    # Shared 16-token system prompt on half the trace: exercises the
+    # prefix-cache + chunked-prefill path under sharding, not just decode.
+    system = rng.integers(1, cfg.vocab_size, size=16)
+    reqs = []
+    for i in range(requests):
+        tail = rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(4, 12)))
+        p = np.concatenate([system, tail]) if i % 2 == 0 else tail
+        reqs.append((p, max_new))
+
+    def measure(mesh):
+        eng = ServingEngine(cfg, params, max_batch=4, max_len=64,
+                            mode="continuous", mesh=mesh, block_size=8,
+                            prefill_chunk=16, seed=11)
+        # Warm pass compiles every prefill bucket + the decode window so
+        # the measured pass times steady-state scheduling, not XLA.
+        for p, m in reqs:
+            eng.submit(p, max_new_tokens=m)
+        eng.run()
+        eng.stats = EngineStats()
+        for p, m in reqs:
+            eng.submit(p, max_new_tokens=m)
+        t0 = time.perf_counter()
+        out = eng.run()
+        wall = time.perf_counter() - t0
+        return out, wall, eng.stats
+
+    solo_out, solo_wall, s0 = measure(None)
+    devs = np.array(jax.devices()[:model_parallel]).reshape(
+        1, model_parallel)
+    mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    shard_out, shard_wall, s1 = measure(mesh)
+
+    sched = lambda s: (s.preemptions, s.admissions, s.cached_prompt_tokens,
+                       s.prefill_tokens, s.generated_tokens)
+    per = lambda s, wall: {
+        "decode_tokens_per_s": s.generated_tokens / max(wall, 1e-9),
+        "prefill_tokens_per_s": s.prefill_tokens / max(wall, 1e-9),
+        "wall_s": wall,
+    }
+    return {
+        "devices": len(jax.devices()),
+        "model_parallel": model_parallel,
+        "requests": requests,
+        "kv_dtype": kv_dtype,
+        "single": per(s0, solo_wall),
+        "sharded": per(s1, shard_wall),
+        "greedy_identical": solo_out == shard_out,
+        "stats_identical": sched(s0) == sched(s1),
+        "note": "CPU interpret-path timing — parity evidence, not a "
+                "speedup claim (model-axis speedup needs real devices)",
+    }
+
+
+def main(argv=None):
+    args = _parse_args(argv)
+    _force_devices(args.model_parallel)
+    rec = run(model_parallel=args.model_parallel, requests=args.requests,
+              max_new=args.max_new, kv_dtype=args.kv_dtype)
+    print(json.dumps(rec))
+    return 0 if rec["greedy_identical"] and rec["stats_identical"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

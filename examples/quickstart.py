@@ -181,6 +181,68 @@ def main():
               f"p99 TTFT {eng.stats.p99_ttft_s * 1e3:.1f}ms, "
               f"p99 ITL {eng.stats.p99_itl_s * 1e3:.1f}ms")
 
+    # 4. Scale out — two rungs on top of one engine:
+    #
+    #   TENSOR scale-up: pass a ("data", "model") mesh to
+    #   ServingEngine(mesh=...).  Weights shard per the serve specs, and
+    #   the paged KV pool's kv-head axis (payload AND SCLAD scale
+    #   leaves) shards over "model" — both paged attention paths then
+    #   run under shard_map with block tables / lengths / starts
+    #   broadcast and the per-shard kernel body unchanged, so there is
+    #   NO pool-sized collective on the hot path.  Greedy outputs are
+    #   bit-identical to the meshless engine (on CPU parity runs use
+    #   float32 params: bf16 tensor-parallel psum reduction order can
+    #   flip a greedy near-tie).  Try it without a TPU via forced host
+    #   devices:
+    #     PYTHONPATH=src python -m benchmarks.sharded_probe --model-parallel 2
+    #     PYTHONPATH=src python -m repro.launch.dryrun --serving-smoke
+    #
+    #   DATA-PARALLEL scale-out: N independent replicas (each its own
+    #   scheduler, pool, and breaker — nothing shared) behind
+    #   serving.router.ReplicaRouter, one submit() surface.  Placement
+    #   is prefix-AFFINITY by default: every replica's prefix cache is
+    #   probed with the SAME hash chain admission uses, the request goes
+    #   to the deepest match (block pools don't gossip — only the
+    #   replica holding your system prompt's blocks can skip its
+    #   prefill), and no-match traffic falls back to least-loaded.
+    #   RejectedError surfaces only when EVERY replica rejected.
+    #   The launcher exposes the same path:
+    #     python -m repro.launch.serve --frontend async --replicas 2 \
+    #         [--router-policy affinity|round_robin]
+    if eng.mode == "continuous":
+        import asyncio
+
+        from repro.serving.router import ReplicaRouter
+
+        def make_replica():
+            return ServingEngine(cfg, params, max_batch=2, max_len=32,
+                                 eos_id=-1, block_size=8,
+                                 prefill_chunk=None)
+
+        async def fleet_demo():
+            async with ReplicaRouter([make_replica(),
+                                      make_replica()]) as router:
+                system = np.arange(5, 13)  # shared "system prompt"
+                # Drain the first request so its prefix blocks commit —
+                # affinity can only follow blocks that exist.
+                first = await router.submit(
+                    np.concatenate([system, [3, 4]]), max_new_tokens=3)
+                async for _ in first:
+                    pass
+                streams = [await router.submit(
+                    np.concatenate([system, tail]), max_new_tokens=3)
+                    for tail in ([6, 7], [8, 9])]
+                for st in streams:
+                    async for _ in st:
+                        pass
+                return router.routing_report()
+
+        rep = asyncio.run(fleet_demo())
+        print(f"router: replicas={rep['replicas']} "
+              f"per_replica={rep['per_replica_requests']} "
+              f"affinity_hit_rate={rep['affinity_hit_rate']:.2f} "
+              f"prefix_hit_rate={rep['prefix_hit_rate']:.2f}")
+
 
 if __name__ == "__main__":
     main()

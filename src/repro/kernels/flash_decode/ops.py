@@ -31,6 +31,7 @@ import jax
 from repro.kernels.flash_decode.flash_decode import (flash_decode,
                                                      paged_flash_decode)
 from repro.kernels.flash_decode.ref import decode_ref, paged_decode_ref
+from repro.parallel import sharding
 
 DECODE_KERNEL_MODES = ("auto", "on", "off")
 
@@ -47,7 +48,7 @@ def resolve_kernel(kernel: str = "auto"):
 
 def decode_attention(q, k_cache, v_cache, lengths, *, block_tables=None,
                      kernel: str = "auto", block_k: int = 128,
-                     kv_scales=None):
+                     kv_scales=None, mesh=None):
     """One decode-attention step.
 
     q: (B, H, D) — the new token's (rotated) queries;
@@ -58,12 +59,21 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_tables=None,
     kv_scales: optional (k_scale, v_scale) (N, bs, Hk) fp32 scales of a
         SCLAD quantized pool (paged layout only) — both implementations
         dequantize the compressed payload on the load path.
+    mesh: optional mesh with a ``model`` axis — the paged path then runs
+        under ``shard_map`` with the pool's KV-head axis (payload and
+        scale leaves) and the query head groups sharded over it; tables
+        and lengths broadcast; per-shard body unchanged.  Ignored (plain
+        single-device dispatch) when the axis can't split Hk evenly.
 
     Returns (B, H, D).  The caller owns the cache scatter of the new K/V;
     this is the read side only.
     """
     use_kernel, interpret = resolve_kernel(kernel)
     if block_tables is not None:
+        if sharding.attn_shard_size(mesh, k_cache.shape[2]) > 1:
+            return _sharded_paged_decode(q, k_cache, v_cache, lengths,
+                                         block_tables, kernel, block_k,
+                                         kv_scales, mesh)
         if not use_kernel:
             return paged_decode_ref(q, k_cache, v_cache, lengths,
                                     block_tables, kv_scales=kv_scales)
@@ -83,3 +93,34 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_tables=None,
         return decode_ref(q, k_cache, v_cache, lengths)
     return flash_decode(q, k_cache, v_cache, lengths, block_k=bk,
                         interpret=interpret)
+
+
+def _sharded_paged_decode(q, k_cache, v_cache, lengths, block_tables,
+                          kernel, block_k, kv_scales, mesh):
+    """shard_map the paged decode read over the mesh's ``model`` axis.
+
+    Attention is independent per KV head, so splitting the pool's Hk axis
+    changes no arithmetic: shard i reads its own contiguous Hk/m pool
+    slice with the matching contiguous H/m query-head group (head h
+    attends kv-head h // rep, and contiguous chunks keep rep per shard),
+    and outputs concat back on the head axis — no collective at all on
+    this read path (the downstream ``@ wo`` psum lives in the layer).
+    Block tables and lengths — the kernel's scalar-prefetch operands —
+    are broadcast so every shard walks the identical table.
+    """
+    sp = sharding.paged_attn_specs()
+    args = [q, k_cache, v_cache, lengths, block_tables]
+    in_specs = [sp["q_decode"], sp["pool"], sp["pool"], sp["host"],
+                sp["host"]]
+    if kv_scales is not None:
+        args += list(kv_scales)
+        in_specs += [sp["scale"], sp["scale"]]
+
+    def body(q, k, v, lengths, tables, *scales):
+        return decode_attention(q, k, v, lengths, block_tables=tables,
+                                kernel=kernel, block_k=block_k,
+                                kv_scales=tuple(scales) or None)
+
+    return sharding.shard_map(body, mesh, in_specs=tuple(in_specs),
+                              out_specs=sp["out_decode"],
+                              check_vma=False)(*args)

@@ -31,6 +31,7 @@ from repro.kernels.flash_decode.ops import (DECODE_KERNEL_MODES,
                                             resolve_kernel)
 from repro.kernels.flash_prefill.flash_prefill import paged_flash_prefill
 from repro.kernels.flash_prefill.ref import prefill_attention_ref
+from repro.parallel import sharding
 
 ATTN_KERNEL_MODES = DECODE_KERNEL_MODES  # ("auto", "on", "off")
 
@@ -38,7 +39,8 @@ ATTN_KERNEL_MODES = DECODE_KERNEL_MODES  # ("auto", "on", "off")
 def prefill_attention(q, k_new, v_new, k_pool, v_pool, lengths,
                       block_tables, *, start: Optional[jnp.ndarray] = None,
                       prefix: int = 0, kernel: str = "auto",
-                      kv_scales=None, kv_dtype: Optional[str] = None):
+                      kv_scales=None, kv_dtype: Optional[str] = None,
+                      mesh=None):
     """One layer of paged chunked-prefill attention + new-token K/V scatter.
 
     q: (B, S, H, D) rotated chunk queries (S = prefix + P, prompt tokens
@@ -58,7 +60,17 @@ def prefill_attention(q, k_new, v_new, k_pool, v_pool, lengths,
     per-lane gather, no dense (B, S, S) mask) and the scatter happens
     inside the kernel; the reference path gathers and scatters host-side,
     bit-exact with the pre-kernel engine.
+
+    mesh: optional mesh with a ``model`` axis — the call then runs under
+    ``shard_map`` with the pools (payload AND scale leaves, which are both
+    inputs and outputs here: the scatter is fused in), the chunk's new
+    K/V, and the query heads sharded over it; tables, lengths, and start
+    broadcast.  Ignored when the axis can't split Hk evenly.
     """
+    if sharding.attn_shard_size(mesh, k_pool.shape[2]) > 1:
+        return _sharded_paged_prefill(q, k_new, v_new, k_pool, v_pool,
+                                      lengths, block_tables, start, prefix,
+                                      kernel, kv_scales, kv_dtype, mesh)
     use_kernel, interpret = resolve_kernel(kernel)
     if not use_kernel:
         return prefill_attention_ref(q, k_new, v_new, k_pool, v_pool,
@@ -73,3 +85,44 @@ def prefill_attention(q, k_new, v_new, k_pool, v_pool, lengths,
                                has_ctx=start is not None,
                                interpret=interpret, kv_scales=kv_scales,
                                kv_dtype=kv_dtype)
+
+
+def _sharded_paged_prefill(q, k_new, v_new, k_pool, v_pool, lengths,
+                           block_tables, start, prefix, kernel, kv_scales,
+                           kv_dtype, mesh):
+    """shard_map chunked prefill over the mesh's ``model`` axis.
+
+    Unlike the decode read, the pools are inputs AND outputs (the new-token
+    scatter is fused into the call), so the pool/scale out_specs mirror the
+    in_specs — each shard scatters its own Hk/m slice in place and the
+    stitched result is exactly the single-device write-back.  The attn
+    output is (B, S, H*D) head-major, so concatenating shards on the last
+    axis restores full head order.  Tables, lengths, and start (scalar-
+    prefetch operands) broadcast.
+    """
+    sp = sharding.paged_attn_specs()
+    args = [q, k_new, v_new, k_pool, v_pool, lengths, block_tables]
+    in_specs = [sp["q_chunk"], sp["new_kv"], sp["new_kv"], sp["pool"],
+                sp["pool"], sp["host"], sp["host"]]
+    out_specs = [sp["out_chunk"], sp["pool"], sp["pool"]]
+    has_start = start is not None
+    if has_start:
+        args.append(jnp.asarray(start, jnp.int32))
+        in_specs.append(sp["host"])
+    if kv_scales is not None:
+        args += list(kv_scales)
+        in_specs += [sp["scale"], sp["scale"]]
+        out_specs += [sp["scale"], sp["scale"]]
+
+    def body(q, k_new, v_new, k_pool, v_pool, lengths, tables, *rest):
+        rest = list(rest)
+        start_s = rest.pop(0) if has_start else None
+        return prefill_attention(q, k_new, v_new, k_pool, v_pool, lengths,
+                                 tables, start=start_s, prefix=prefix,
+                                 kernel=kernel,
+                                 kv_scales=tuple(rest) or None,
+                                 kv_dtype=kv_dtype)
+
+    return sharding.shard_map(body, mesh, in_specs=tuple(in_specs),
+                              out_specs=tuple(out_specs),
+                              check_vma=False)(*args)

@@ -284,6 +284,63 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path,
     return rec
 
 
+def run_serving_smoke(out_dir: Path, model_parallel: int = 2,
+                      requests: int = 4, max_new: int = 8) -> dict:
+    """Multi-host serving smoke: sharded-engine vs solo-engine parity.
+
+    Uses the forced 512-device host platform this module already runs
+    under, but builds a SMALL (1, model_parallel) submesh over the first
+    few devices (compiling against all 512 would take minutes for a
+    smoke).  A reduced engine with the paged pool sharded over ``model``
+    must emit greedy tokens identical to the meshless engine — float32
+    params so TP psum reduction-order noise cannot flip an argmax — with
+    bitwise-identical scheduler stats.  Writes serving_smoke.json.
+    """
+    import numpy as np
+
+    from repro.serving.engine import ServingEngine
+
+    cfg = dataclasses.replace(get_config("tinyllama-1.1b").reduced(),
+                              num_heads=4, num_kv_heads=4)
+    params = jax.tree.map(lambda x: x.astype(jax.numpy.float32),
+                          M.init_params(cfg, jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(n)).tolist()
+               for n in rng.integers(4, 14, size=requests)]
+
+    def run(mesh):
+        eng = ServingEngine(cfg, params, max_batch=4, max_len=48,
+                            mode="continuous", mesh=mesh, block_size=8,
+                            prefill_chunk=8, seed=7)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=max_new)
+        t0 = time.time()
+        out = eng.run()
+        return out, time.time() - t0, eng.stats
+
+    solo, solo_s, s0 = run(None)
+    devs = np.array(jax.devices()[:model_parallel]).reshape(
+        1, model_parallel)
+    mesh = jax.sharding.Mesh(devs, ("data", "model"))
+    shard, shard_s, s1 = run(mesh)
+    rec = {
+        "status": "ok" if solo == shard else "error",
+        "devices": model_parallel,
+        "model_parallel": model_parallel,
+        "requests": requests,
+        "greedy_identical": solo == shard,
+        "stats_identical": (s0.preemptions, s0.admissions,
+                            s0.cached_prompt_tokens)
+        == (s1.preemptions, s1.admissions, s1.cached_prompt_tokens),
+        "solo_wall_s": round(solo_s, 3),
+        "sharded_wall_s": round(shard_s, 3),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"serving_smoke__mp{model_parallel}.json"
+    path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
 def cells(mesh_sel: str):
     meshes = {"single": ["single"], "multi": ["multi"],
               "both": ["single", "multi"]}[mesh_sel]
@@ -303,8 +360,21 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "f8"])
     ap.add_argument("--out", default=str(OUT_DIR))
+    ap.add_argument("--serving-smoke", action="store_true",
+                    help="run the multi-host serving parity smoke (a "
+                         "sharded reduced engine vs the meshless one) "
+                         "instead of the compile sweep")
+    ap.add_argument("--model-parallel", type=int, default=2,
+                    help="[--serving-smoke] model-axis width of the "
+                         "submesh the sharded engine runs on")
     args = ap.parse_args()
     out_dir = Path(args.out)
+
+    if args.serving_smoke:
+        rec = run_serving_smoke(out_dir,
+                                model_parallel=args.model_parallel)
+        print(json.dumps(rec, indent=2))
+        return 0 if rec["status"] == "ok" else 1
 
     if args.all:
         todo = list(cells(args.mesh))

@@ -28,9 +28,10 @@ from repro.models import model as M
 from repro.serving.engine import ServingEngine
 from repro.serving.frontend import CircuitBreaker
 from repro.serving.openloop import poisson_trace, run_open_loop
+from repro.serving.router import ROUTER_POLICIES, run_open_loop_router
 from repro.serving.sampler import SamplerConfig
 from repro.serving.spec import SPEC_DECODE_MODES
-from repro.serving.warmup import warmup_prefill
+from repro.serving.warmup import trace_prompt_lens, warmup_prefill
 
 
 def resolve_attn_kernel_arg(attn_kernel, decode_kernel) -> str:
@@ -160,25 +161,45 @@ def main():
     ap.add_argument("--breaker-probes", type=int, default=1,
                     help="[async] probe requests admitted half-open; this "
                          "many clean completions close the breaker")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="[async] data-parallel scale-out: run this many "
+                         "independent engine replicas behind a "
+                         "prefix-affinity router (each replica is its own "
+                         "controller — own scheduler, KV pool, breaker; "
+                         "requests route to the replica already holding "
+                         "their prefix blocks, else least-loaded)")
+    ap.add_argument("--router-policy", default="affinity",
+                    choices=list(ROUTER_POLICIES),
+                    help="[async, --replicas > 1] placement policy: "
+                         "'affinity' (prefix-cache match, then "
+                         "least-loaded) or the 'round_robin' baseline")
     args = ap.parse_args()
 
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.replicas > 1 and args.frontend != "async":
+        raise SystemExit("--replicas requires --frontend async (the "
+                         "router fronts AsyncFrontend replicas)")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    engine = ServingEngine(
-        cfg, params, max_batch=args.max_batch,
-        max_len=64 + args.shared_prefix + args.max_new, mode=args.mode,
-        seed=args.seed,
-        block_size=args.block_size, num_blocks=args.num_blocks,
-        prefill_chunk=args.prefill_chunk or None,
-        prefix_cache=args.prefix_cache, decode_steps=args.decode_steps,
-        attn_kernel=resolve_attn_kernel_arg(args.attn_kernel,
-                                            args.decode_kernel),
-        preempt_policy=args.preempt_policy, kv_dtype=args.kv_dtype,
-        spec_decode=args.spec_decode, spec_k=args.spec_k,
-        sampler=SamplerConfig(temperature=args.temperature, top_k=50))
 
+    def make_engine():
+        return ServingEngine(
+            cfg, params, max_batch=args.max_batch,
+            max_len=64 + args.shared_prefix + args.max_new, mode=args.mode,
+            seed=args.seed,
+            block_size=args.block_size, num_blocks=args.num_blocks,
+            prefill_chunk=args.prefill_chunk or None,
+            prefix_cache=args.prefix_cache, decode_steps=args.decode_steps,
+            attn_kernel=resolve_attn_kernel_arg(args.attn_kernel,
+                                                args.decode_kernel),
+            preempt_policy=args.preempt_policy, kv_dtype=args.kv_dtype,
+            spec_decode=args.spec_decode, spec_k=args.spec_k,
+            sampler=SamplerConfig(temperature=args.temperature, top_k=50))
+
+    engine = make_engine()
     rng = np.random.default_rng(args.seed)
     system = rng.integers(1, cfg.vocab_size, size=args.shared_prefix)
 
@@ -186,25 +207,42 @@ def main():
         if engine.mode != "continuous":
             raise SystemExit("--frontend async requires the continuous "
                              "scheduler (got mode=wave)")
-        # Warm the jit caches closed-loop first so the open-loop clock
-        # measures serving latency, not compilation — every (admission
-        # group size, chunk bucket) shape the trace can hit, not just
-        # group size 1 (see serving.warmup).
-        warmup_prefill(engine, cfg.vocab_size,
-                       prompt_lens=(4, 16, 16 + args.shared_prefix))
         trace = poisson_trace(
             rng, args.requests, args.arrival_rate, cfg.vocab_size,
             prompt_len=(4, 16), budget=(args.max_new, args.max_new),
             shared_prefix=system if args.shared_prefix else None,
             prefix_fraction=0.5 if args.shared_prefix else 0.0)
-        breaker = CircuitBreaker(
-            window=args.breaker_window, trip_pressure=args.breaker_trip,
-            sat_threshold=args.breaker_sat,
-            cooldown_ticks=args.breaker_cooldown,
-            probes=args.breaker_probes)
+        # Warm the jit caches closed-loop first so the open-loop clock
+        # measures serving latency, not compilation — the SAME
+        # (group-size, chunk-bucket) coverage rule the bench uses,
+        # derived from the actual trace (see serving.warmup).
+        engines = [engine] + [make_engine()
+                              for _ in range(args.replicas - 1)]
+        lens = trace_prompt_lens(trace, engine,
+                                 extra=(16 + args.shared_prefix,))
+        for e in engines:
+            warmup_prefill(e, cfg.vocab_size, prompt_lens=lens)
+
+        def breaker():
+            return CircuitBreaker(
+                window=args.breaker_window,
+                trip_pressure=args.breaker_trip,
+                sat_threshold=args.breaker_sat,
+                cooldown_ticks=args.breaker_cooldown,
+                probes=args.breaker_probes)
+
+        if args.replicas > 1:
+            report, router = run_open_loop_router(
+                engines, trace, policy=args.router_policy,
+                max_queue_depth=args.max_queue_depth,
+                breaker_factory=breaker)
+            out = report.summary(args.slo_ttft)
+            out["routing"] = router.routing_report()
+            print(json.dumps(out, indent=2))
+            return
         report = run_open_loop(engine, trace,
                                max_queue_depth=args.max_queue_depth,
-                               breaker=breaker)
+                               breaker=breaker())
         print(json.dumps(report.summary(args.slo_ttft), indent=2))
         return
 

@@ -268,6 +268,7 @@ def attention_decode(
     use_rope: bool = True,
     block_tables: Optional[jnp.ndarray] = None,
     kv_scales: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    mesh=None,
 ):
     """Single-token decode with in-place cache update.
 
@@ -304,6 +305,11 @@ def attention_decode(
     dequantize on load.  The quantized write runs here in jnp for BOTH
     ``attn_kernel`` read paths, so the pool bytes a decode step leaves
     behind are identical whichever kernel serves the read.
+
+    mesh: threaded to ``decode_attention`` on the paged branches — when it
+    carries a nontrivial ``model`` axis that divides Hk, the pool read
+    runs shard_mapped over the KV heads (the scatter above stays outside:
+    a sharded pool's ``.at[].set`` is itself a local per-shard write).
 
     Returns (out (B,1,d), k_cache, v_cache) — plus (k_scale, v_scale)
     appended when ``kv_scales`` is given.
@@ -345,14 +351,14 @@ def attention_decode(
             out = decode_ops.decode_attention(
                 q[:, 0], k_cache, v_cache, lengths,
                 block_tables=block_tables, kernel=cfg.attn_kernel,
-                kv_scales=(k_scale, v_scale))
+                kv_scales=(k_scale, v_scale), mesh=mesh)
             return (out.reshape(B, 1, -1).astype(x.dtype) @ p["wo"],
                     k_cache, v_cache, k_scale, v_scale)
         k_cache = k_cache.at[blk, pos % bs].set(k[:, 0].astype(k_cache.dtype))
         v_cache = v_cache.at[blk, pos % bs].set(v[:, 0].astype(v_cache.dtype))
         out = decode_ops.decode_attention(
             q[:, 0], k_cache, v_cache, lengths, block_tables=block_tables,
-            kernel=cfg.attn_kernel)
+            kernel=cfg.attn_kernel, mesh=mesh)
     return out.reshape(B, 1, -1).astype(x.dtype) @ p["wo"], k_cache, v_cache
 
 

@@ -424,7 +424,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
 
 
 def init_paged_cache(cfg: ModelConfig, num_blocks: int,
-                     block_size: int) -> Params:
+                     block_size: int, mesh=None) -> Params:
     """KV cache as a pool of fixed-size token blocks (attention families).
 
     Layout (L, num_blocks, block_size, Hk, hd): block ``b`` holds
@@ -446,6 +446,13 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
     flash kernels and their jnp references — carries the scale leaves
     alongside the payload; block identity (hashing, sharing, COW, LRU) is
     over the (payload, scale) pair as one unit.
+
+    With a ``mesh`` the pool is placed per ``cache_specs(paged=True)``:
+    payload and scale leaves co-sharded on the KV-head axis over ``model``
+    (so the shard_map'd kernels dequantize locally), everything else
+    replicated.  ``sanitize_specs`` drops the head sharding when Hk does
+    not divide the axis — the same gate ``attn_shard_size`` applies at
+    dispatch, so placement and dispatch always agree.
     """
     fam = cfg.family
     if fam not in ("dense", "moe", "vlm"):
@@ -454,7 +461,7 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
     hk, hd, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
     if kv_quant.is_quantized(cfg.kv_dtype):
         KVD = kv_quant.payload_dtype(cfg.kv_dtype)
-        return {
+        cache = {
             "k": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
             "v": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
             # All-zero payload rows carry scale 1.0 by the quantizer's
@@ -465,11 +472,18 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
             "v_scale": jnp.ones((L, num_blocks, block_size, hk),
                                 jnp.float32),
         }
-    KVD = kv_store_dtype(cfg)
-    return {
-        "k": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
-        "v": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
-    }
+    else:
+        KVD = kv_store_dtype(cfg)
+        cache = {
+            "k": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
+            "v": jnp.zeros((L, num_blocks, block_size, hk, hd), KVD),
+        }
+    if mesh is None:
+        return cache
+    with sharding.use_axes(mesh):
+        specs = sharding.cache_specs(cfg, cache, None, 1, paged=True)
+        specs = sharding.sanitize_specs(specs, cache)
+    return jax.device_put(cache, sharding.to_shardings(mesh, specs))
 
 
 def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
@@ -511,8 +525,8 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
                   block_tables: jnp.ndarray,
                   start: Optional[jnp.ndarray] = None,
                   patch_embeds: Optional[jnp.ndarray] = None,
-                  all_logits: bool = False
-                  ) -> Tuple[jnp.ndarray, Params]:
+                  all_logits: bool = False,
+                  mesh=None) -> Tuple[jnp.ndarray, Params]:
     """Prefill one left-padded prompt CHUNK per row into a paged KV cache.
 
     The continuous-batching admission path: a group of requests with
@@ -625,7 +639,7 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
                 q, k, v, kc, vc, lengths, block_tables,
                 start=None if first else start_v, prefix=prefix,
                 kernel=cfg.attn_kernel, kv_scales=(ksc, vsc),
-                kv_dtype=cfg.kv_dtype)
+                kv_dtype=cfg.kv_dtype, mesh=mesh)
             x, _ = _attn_post(cfg, blk, x, a, moe_valid=real_key)
             return x, (kc, vc, ksc, vsc)
 
@@ -640,7 +654,7 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
             a, kc, vc = prefill_ops.prefill_attention(
                 q, k, v, kc, vc, lengths, block_tables,
                 start=None if first else start_v, prefix=prefix,
-                kernel=cfg.attn_kernel)
+                kernel=cfg.attn_kernel, mesh=mesh)
             x, _ = _attn_post(cfg, blk, x, a, moe_valid=real_key)
             return x, (kc, vc)
 
@@ -658,8 +672,8 @@ def prefill_slots(cfg: ModelConfig, params: Params, cache: Params,
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 tokens: jnp.ndarray, position: jnp.ndarray,
                 active: Optional[jnp.ndarray] = None,
-                block_tables: Optional[jnp.ndarray] = None
-                ) -> Tuple[jnp.ndarray, Params]:
+                block_tables: Optional[jnp.ndarray] = None,
+                mesh=None) -> Tuple[jnp.ndarray, Params]:
     """One autoregressive step. tokens: (B, 1); position: scalar int32 OR a
     per-row (B,) int32 vector (index of each row's new token within the
     cache context — continuous batching runs rows at different offsets).
@@ -709,7 +723,8 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 a, kc, vc, ksc, vsc = layers.attention_decode(
                     cfg, blk["attn"],
                     layers.apply_norm(cfg, blk["ln_attn"], x), kc, vc, pos,
-                    block_tables=block_tables, kv_scales=(ksc, vsc))
+                    block_tables=block_tables, kv_scales=(ksc, vsc),
+                    mesh=mesh)
                 x = ffn(x + a, blk)
                 return x, (kc, vc, ksc, vsc)
 
@@ -724,7 +739,7 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 a, kc, vc = layers.attention_decode(
                     cfg, blk["attn"],
                     layers.apply_norm(cfg, blk["ln_attn"], x), kc, vc, pos,
-                    block_tables=block_tables)
+                    block_tables=block_tables, mesh=mesh)
                 x = ffn(x + a, blk)
                 return x, (kc, vc)
 

@@ -337,6 +337,55 @@ def to_shardings(mesh, spec_tree):
 
 
 # ---------------------------------------------------------------------------
+# Serving-side shard_map helpers (the paged-attention dispatch wrappers in
+# kernels/flash_decode/ops.py and kernels/flash_prefill/ops.py)
+# ---------------------------------------------------------------------------
+
+#: The tensor-parallel mesh axis every serving-side rule shards over.
+TP_AXIS = "model"
+
+
+def attn_shard_size(mesh, num_kv_heads: int, axis: str = TP_AXIS) -> int:
+    """How many ways the paged attention dispatch can shard the KV-head axis.
+
+    The shard_map wrappers split the (N, bs, Hk, D) pool — payload AND
+    SCLAD scale leaves — plus the query head groups over ``axis``, with
+    everything host-derived (block tables, length/start vectors — the
+    kernels' scalar-prefetch operands) broadcast.  Returns 1 (single-device
+    dispatch, no wrapper) when there is no mesh, the mesh has no ``axis``
+    (or it is trivial), or ``num_kv_heads`` does not divide it evenly —
+    exactly the cases ``sanitize_specs`` drops the pool's head sharding
+    for, so cache placement and kernel dispatch always agree.
+    """
+    if mesh is None:
+        return 1
+    m = AxisState.from_mesh(mesh).size(axis)
+    return m if m > 1 and num_kv_heads % m == 0 else 1
+
+
+def paged_attn_specs(axis: str = TP_AXIS) -> Dict[str, P]:
+    """PartitionSpecs for the paged-attention shard_map wrappers.
+
+    Head-axis sharding is contiguous, so a shard's Hk/m KV heads arrive
+    with ALL of their ``rep = H // Hk`` query heads (queries are laid out
+    head-major) — the per-shard kernel body is the unchanged single-device
+    kernel on a contiguous head slice.  ``out_chunk`` is the prefill
+    output AFTER its (B, S, H, D) -> (B, S, H*D) head-major flatten, so
+    concatenating shards on the last axis restores the full head order.
+    """
+    return {
+        "q_decode": P(None, axis, None),        # (B, H, D) head groups
+        "q_chunk": P(None, None, axis, None),   # (B, S, H, D)
+        "new_kv": P(None, None, axis, None),    # (B, S, Hk, D) chunk K/V
+        "pool": P(None, None, axis, None),      # (N, bs, Hk, D)
+        "scale": P(None, None, axis),           # (N, bs, Hk) SCLAD scales
+        "host": P(),                            # tables/lengths/starts
+        "out_decode": P(None, axis, None),      # (B, H, D)
+        "out_chunk": P(None, None, axis),       # (B, S, H*D) head-major
+    }
+
+
+# ---------------------------------------------------------------------------
 # jax version compatibility (shard_map moved out of experimental in ~0.6;
 # the replication check was renamed check_rep -> check_vma, and the active
 # mesh accessor became jax.sharding.get_abstract_mesh)

@@ -364,6 +364,21 @@ class ServingEngine:
         "continuous" (error if unsupported) or "wave" (force the legacy
         lockstep baseline).
 
+        mesh: optional device mesh for tensor scale-up.  One engine is ONE
+        controller over one mesh — the single-controller-per-replica model:
+        the host-side scheduler (queue, BlockStore, block tables, preempt/
+        admit decisions) runs unreplicated on this process, and the mesh
+        only widens the jitted device work.  What shards over the mesh's
+        ``model`` axis: the weights (``param_specs(mode="serve")``), the
+        paged KV pool's KV-head axis — payload AND SCLAD scale leaves,
+        co-placed by ``cache_specs(paged=True)`` — and, through the
+        ``shard_map`` wrappers in ``kernels.*.ops``, the attention heads
+        of both paged hot paths.  What broadcasts: block tables, lengths/
+        start vectors and every other scalar-prefetch operand, sampled
+        tokens, logits, and all scheduler state.  Replica scale-OUT (many
+        engines, each with its own mesh or none) lives one level up in
+        ``serving.router.ReplicaRouter``.
+
         block_size / num_blocks / prefill_chunk / prefix_cache /
         decode_steps: paged-KV and scheduler knobs, see the module
         docstring.
@@ -895,6 +910,36 @@ class ServingEngine:
             return 0.0
         return self._alloc.live_blocks / max(self._alloc.num_blocks, 1)
 
+    @property
+    def live_blocks(self) -> int:
+        """Blocks currently referenced by some in-flight lane (the load
+        half of the replica router's least-loaded fallback)."""
+        if self.mode != "continuous":
+            return 0
+        return self._alloc.live_blocks
+
+    def match_cached_blocks(self, prompt, patch_embeds=None) -> int:
+        """How many leading blocks of ``prompt`` this engine's prefix cache
+        could serve RIGHT NOW, without admitting or touching any state.
+
+        The replica router's affinity probe: it hashes the prompt with the
+        SAME chain (vlm patch sentinels + per-request chain seed +
+        kv_dtype-namespaced root) admission uses, so a nonzero answer here
+        is exactly a nonzero ``cached_len`` if the request were admitted
+        here next.  0 when the engine is not continuous or prefix caching
+        is off."""
+        if self.mode != "continuous" or not self.prefix_cache:
+            return 0
+        content = np.concatenate([
+            np.full(self._prefix, -1, np.int64),
+            np.asarray(prompt, np.int64)])
+        digests = chain_hashes(content, self._alloc.block_size,
+                               seed=self._chain_seed(patch_embeds))
+        return self._alloc.match_digests(
+            digests,
+            max_cached_tokens=self._prefix + len(prompt) - 1,
+            min_cached_tokens=self._prefix)[0]
+
     def cancel(self, uid: int) -> bool:
         """Abort a request wherever it currently is — queued, mid-prefill
         or decoding — releasing its KV blocks exactly like a retirement
@@ -964,10 +1009,11 @@ class ServingEngine:
         self._alloc = BlockStore(self.num_blocks, bs, B, table_width,
                                  prefix_cache=self.prefix_cache,
                                  kv_dtype=cfg.kv_dtype)
-        # +1 device block: id 0 is the dead-lane trash sink.
-        self._cache = M.init_paged_cache(cfg, self.num_blocks + 1, bs)
-        if self._mesh is not None:
-            self._cache = self._place_cache(self._mesh, self._cache)
+        # +1 device block: id 0 is the dead-lane trash sink.  With a mesh
+        # the pool lands pre-sharded on its KV-head axis (payload + scale
+        # leaves co-placed) so the shard_map'd kernels read it in place.
+        self._cache = M.init_paged_cache(cfg, self.num_blocks + 1, bs,
+                                         mesh=self._mesh)
         # Device bytes per pool block, all layers, K+V, summed over EVERY
         # cache leaf (axis 1 is blocks for payload and scale leaves
         # alike) — so a quantized pool's number is the true compressed
@@ -1019,7 +1065,8 @@ class ServingEngine:
                 logits2, cache = M.decode_step(cfg, params, cache,
                                                tok[:, None], pos,
                                                active=active,
-                                               block_tables=tbl)
+                                               block_tables=tbl,
+                                               mesh=self._mesh)
                 pos = pos + active.astype(jnp.int32)
                 new_active = active & ~retire
                 return ((cache, logits2[:, 0], pos, new_active, budget),
@@ -1041,22 +1088,23 @@ class ServingEngine:
         # bucket) shape combination; power-of-two buckets keep the number
         # of retraces small.  vlm first chunks take the cohort's (possibly
         # per-request) patch embeddings explicitly.
+        mesh = self._mesh
         if cfg.family == "vlm":
             self._prefill_first = jax.jit(
                 self._scoped(
                     lambda p, c, t, ln, bt, pe: M.prefill_slots(
-                        cfg, p, c, t, ln, bt, patch_embeds=pe)),
+                        cfg, p, c, t, ln, bt, patch_embeds=pe, mesh=mesh)),
                 donate_argnums=(1,) if donate else ())
         else:
             self._prefill_first = jax.jit(
                 self._scoped(
-                    lambda p, c, t, ln, bt: M.prefill_slots(cfg, p, c, t, ln,
-                                                            bt)),
+                    lambda p, c, t, ln, bt: M.prefill_slots(
+                        cfg, p, c, t, ln, bt, mesh=mesh)),
                 donate_argnums=(1,) if donate else ())
         self._prefill_cont = jax.jit(
             self._scoped(
                 lambda p, c, t, ln, bt, st: M.prefill_slots(
-                    cfg, p, c, t, ln, bt, start=st)),
+                    cfg, p, c, t, ln, bt, start=st, mesh=mesh)),
             donate_argnums=(1,) if donate else ())
 
         if self._proposer is not None:
@@ -1086,7 +1134,7 @@ class ServingEngine:
                 back the rejected tail with ``BlockStore.truncate``."""
                 logits_all, cache = M.prefill_slots(
                     cfg, params, cache, tokens, lengths, tables,
-                    start=starts, all_logits=True)
+                    start=starts, all_logits=True, mesh=mesh)
                 Bn, P = tokens.shape
                 pad = (P - lengths).astype(jnp.int32)
                 # Column c of row b holds the token AT token-position
@@ -1447,14 +1495,6 @@ class ServingEngine:
             specs = sharding.sanitize_specs(specs, params)
             return jax.device_put(params,
                                   sharding.to_shardings(mesh, specs))
-
-    def _place_cache(self, mesh, cache):
-        with sharding.use_axes(self._axes):
-            specs = sharding.cache_specs(
-                self.cfg, cache, self._axes.dp or None, self.max_batch,
-                paged=True)
-            specs = sharding.sanitize_specs(specs, cache)
-            return jax.device_put(cache, sharding.to_shardings(mesh, specs))
 
     # -- legacy wave path ----------------------------------------------------
     def _run_waves(self) -> Dict[int, List[int]]:

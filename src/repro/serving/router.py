@@ -1,0 +1,284 @@
+"""Prefix-affinity replica router: N serving engines, one admission surface.
+
+Rung 2 of the scale ladder (the paper's §4 cloud posture): tensor
+parallelism widens ONE engine over a mesh (``ServingEngine(mesh=...)``);
+past that, throughput comes from REPLICAS — independent engines, each its
+own single controller (own scheduler, own ``BlockStore``, own KV pool,
+own breaker), coordinated only at admission time.  ``ReplicaRouter``
+fronts N ``AsyncFrontend``-wrapped engines with exactly the client API of
+one frontend (``submit`` -> ``TokenStream``), so the open-loop driver and
+any other client code run against a fleet unchanged.
+
+Placement is the router's whole job, and prefix caching makes it
+non-trivial: a replica that already holds a request's leading blocks
+serves it with most of its prefill skipped, but ONLY that replica —
+block pools do not gossip.  Policies:
+
+  * ``"affinity"`` (default) — probe every replica's prefix cache with
+    ``engine.match_cached_blocks`` (the SAME hash chain admission uses:
+    vlm patch sentinels, per-request chain seed, kv_dtype-namespaced
+    root, so a hit here is a hit at admission) and route to the deepest
+    match; ties — including the no-match common case — fall back to
+    least-loaded by ``live blocks + frontend queue depth``.  Result:
+    shared-system-prompt traffic converges onto warm replicas (aggregate
+    prefix hit-rate approaches the single-engine rate) while cold
+    traffic spreads by load.
+  * ``"round_robin"`` — rotate submissions; the affinity-blind baseline
+    the bench compares against (shared prefixes get re-prefetched on
+    every replica they land on).
+
+Admission folds per-replica backpressure/breaker state into ONE
+client-facing surface: a submit tries replicas in preference order and
+only raises ``RejectedError`` when EVERY replica rejected — with
+``kind="breaker"`` only when all of them were shedding (the fleet is
+saturated), else ``kind="backpressure"`` (retry with backoff; some queue
+was merely full).  A single overloaded replica therefore sheds onto its
+peers before the client ever sees a 503.
+
+Correctness contract: the router never touches tokens — per-request
+streams are bit-identical to the same prompt on a solo engine (greedy
+sampling; stochastic streams are keyed by per-engine uids and so depend
+on placement by construction).  Pinned in tests/test_router.py.
+"""
+from __future__ import annotations
+
+import asyncio
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.engine import ServingEngine
+from repro.serving.frontend import (AsyncFrontend, CircuitBreaker,
+                                    RejectedError, TokenStream)
+
+ROUTER_POLICIES = ("affinity", "round_robin")
+
+
+@dataclass
+class RouterStats:
+    """Admission-time routing outcomes (token accounting lives in each
+    engine's own ``EngineStats``)."""
+    submitted: int = 0
+    rejected: int = 0
+    #: Submits whose chosen replica already held >= 1 block of the prompt
+    #: (over submits where ANY replica did — the router's hit-RATE is
+    #: affinity_hits / affinity_eligible).
+    affinity_hits: int = 0
+    affinity_eligible: int = 0
+    #: Submits that overflowed their preferred replica onto a later one.
+    spillovers: int = 0
+    per_replica: List[int] = field(default_factory=list)
+
+
+class _FleetBreaker:
+    """Read-only aggregate of the replicas' breakers, shaped like one
+    ``CircuitBreaker`` for ``OpenLoopReport.summary`` (opens / shed /
+    state / transitions).  State is the most-degraded replica's."""
+
+    def __init__(self, breakers: Sequence[CircuitBreaker]):
+        self._breakers = list(breakers)
+
+    @property
+    def opens(self) -> int:
+        return sum(b.opens for b in self._breakers)
+
+    @property
+    def shed(self) -> int:
+        return sum(b.shed for b in self._breakers)
+
+    @property
+    def state(self) -> str:
+        states = {b.state for b in self._breakers}
+        for worst in ("open", "half_open"):
+            if worst in states:
+                return worst
+        return "closed"
+
+    @property
+    def transitions(self) -> List[tuple]:
+        return [t for b in self._breakers for t in b.transitions]
+
+
+class ReplicaRouter:
+    """N independent ``ServingEngine`` replicas behind one ``submit``.
+
+    Single-controller-per-replica: each engine keeps its own scheduler
+    loop, block store, and pump thread (via its ``AsyncFrontend``);
+    NOTHING is shared between replicas — no pool, no stats, no PRNG
+    stream — so a replica is exactly a solo engine and the fleet scales
+    by copying it.  The router holds only admission-time state (the
+    routing counters and round-robin cursor) on the event loop, so
+    ``submit`` is safe to call from many client coroutines.
+
+    ``engines`` may be heterogeneous (different meshes, kernels, pool
+    sizes); affinity and load probes read each engine's public surface
+    (``match_cached_blocks``, ``live_blocks``) without assumptions.
+    ``breaker_factory`` builds one breaker PER replica (None = each
+    frontend's default); sharing one breaker object across replicas
+    would serialize their pump threads on it and is not supported.
+    """
+
+    def __init__(self, engines: Sequence[ServingEngine], *,
+                 policy: str = "affinity", max_queue_depth: int = 64,
+                 breaker_factory: Optional[Callable[[], CircuitBreaker]]
+                 = None,
+                 idle_sleep_s: float = 0.001):
+        if not engines:
+            raise ValueError("ReplicaRouter needs at least one engine")
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(
+                f"policy {policy!r} not in {ROUTER_POLICIES}")
+        self.policy = policy
+        self.frontends = [
+            AsyncFrontend(e, max_queue_depth=max_queue_depth,
+                          breaker=breaker_factory() if breaker_factory
+                          else None,
+                          idle_sleep_s=idle_sleep_s)
+            for e in engines]
+        self.stats = RouterStats(per_replica=[0] * len(engines))
+        self._rr = 0
+
+    @property
+    def engines(self) -> List[ServingEngine]:
+        return [fe.engine for fe in self.frontends]
+
+    @property
+    def breaker(self) -> _FleetBreaker:
+        """Aggregate breaker view (``OpenLoopReport.summary`` reads it)."""
+        return _FleetBreaker([fe.breaker for fe in self.frontends])
+
+    @property
+    def queue_depth(self) -> int:
+        return sum(fe.queue_depth for fe in self.frontends)
+
+    # -- lifecycle -----------------------------------------------------------
+    async def start(self) -> "ReplicaRouter":
+        for fe in self.frontends:
+            await fe.start()
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        for fe in self.frontends:
+            await fe.stop(drain=drain)
+
+    async def __aenter__(self) -> "ReplicaRouter":
+        return await self.start()
+
+    async def __aexit__(self, exc_type, exc, tb) -> None:
+        await self.stop(drain=exc_type is None)
+
+    # -- placement -----------------------------------------------------------
+    def _load(self, i: int) -> int:
+        """Least-loaded fallback signal: device blocks the replica's
+        in-flight requests hold plus requests it has accepted but not
+        finished (covers queued work not yet admitted to a lane)."""
+        return self.frontends[i].engine.live_blocks \
+            + self.frontends[i].queue_depth
+
+    def _order(self, prompt, patch_embeds) -> List[int]:
+        """Replica indices in preference order for one submit."""
+        n = len(self.frontends)
+        if self.policy == "round_robin":
+            order = [(self._rr + k) % n for k in range(n)]
+            self._rr = (self._rr + 1) % n
+            return order
+        matches = [fe.engine.match_cached_blocks(prompt,
+                                                 patch_embeds=patch_embeds)
+                   for fe in self.frontends]
+        if any(matches):
+            self.stats.affinity_eligible += 1
+        order = sorted(range(n),
+                       key=lambda i: (-matches[i], self._load(i), i))
+        if matches[order[0]] > 0:
+            self.stats.affinity_hits += 1
+        return order
+
+    # -- submission ----------------------------------------------------------
+    async def submit(self, prompt, max_new_tokens: int = 32, *,
+                     deadline: Optional[float] = None, priority: int = 0,
+                     patch_embeds: Optional[np.ndarray] = None
+                     ) -> TokenStream:
+        """Route one request to a replica; returns its ``TokenStream``.
+
+        Tries replicas in preference order; raises ``RejectedError`` only
+        when every replica rejected (``kind="breaker"`` iff ALL were
+        breaker sheds — the whole fleet is saturated)."""
+        order = self._order(prompt, patch_embeds)
+        kinds = []
+        for k, i in enumerate(order):
+            try:
+                stream = await self.frontends[i].submit(
+                    prompt, max_new_tokens=max_new_tokens,
+                    deadline=deadline, priority=priority,
+                    patch_embeds=patch_embeds)
+            except RejectedError as e:
+                kinds.append(e.kind)
+                continue
+            self.stats.submitted += 1
+            self.stats.per_replica[i] += 1
+            if k > 0:
+                self.stats.spillovers += 1
+            return stream
+        self.stats.rejected += 1
+        kind = "breaker" if kinds and all(k == "breaker" for k in kinds) \
+            else "backpressure"
+        raise RejectedError(
+            f"all {len(order)} replicas rejected ({', '.join(kinds)})",
+            kind=kind)
+
+    # -- reporting -----------------------------------------------------------
+    def routing_report(self) -> Dict[str, object]:
+        """Routing + aggregate engine-side outcomes for the bench."""
+        s = self.stats
+        engines = self.engines
+        cached = sum(e.stats.cached_prompt_tokens for e in engines)
+        prefill = sum(e.stats.prefill_tokens for e in engines)
+        return {
+            "policy": self.policy,
+            "replicas": len(engines),
+            "submitted": s.submitted,
+            "rejected": s.rejected,
+            "spillovers": s.spillovers,
+            "per_replica_requests": list(s.per_replica),
+            "affinity_hit_rate": (s.affinity_hits
+                                  / max(s.affinity_eligible, 1)),
+            "prefix_hit_rate": cached / max(cached + prefill, 1),
+            "generated_tokens": sum(e.stats.generated_tokens
+                                    for e in engines),
+        }
+
+
+def run_open_loop_router(engines: Sequence[ServingEngine],
+                         trace, *, policy: str = "affinity",
+                         max_queue_depth: int = 64,
+                         breaker_factory: Optional[
+                             Callable[[], CircuitBreaker]] = None,
+                         idle_sleep_s: float = 0.001):
+    """Drive an open-loop trace through a fresh router over ``engines``;
+    returns ``(OpenLoopReport, ReplicaRouter)``.  The report's
+    ``summary()`` works as-is (the router quacks enough like a frontend —
+    it has a ``breaker``); routing detail comes from
+    ``router.routing_report()``."""
+    import time
+
+    from repro.serving.openloop import OpenLoopReport, drive
+
+    router = ReplicaRouter(engines, policy=policy,
+                           max_queue_depth=max_queue_depth,
+                           breaker_factory=breaker_factory,
+                           idle_sleep_s=idle_sleep_s)
+
+    async def main():
+        await router.start()
+        try:
+            return await drive(router, trace)
+        finally:
+            await router.stop(drain=True)
+
+    t0 = time.perf_counter()
+    records = asyncio.run(main())
+    report = OpenLoopReport(records=records,
+                            wall_s=time.perf_counter() - t0,
+                            frontend=router)
+    return report, router

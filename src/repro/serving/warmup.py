@@ -15,9 +15,44 @@ already compiled when the clock starts.
 """
 from __future__ import annotations
 
-from typing import Iterable
+from typing import Iterable, Sequence, Tuple
 
 import numpy as np
+
+
+def trace_prompt_lens(trace: Sequence, engine,
+                      extra: Iterable[int] = ()) -> Tuple[int, ...]:
+    """Representative prompt lengths covering every prefill shape an
+    open-loop ``trace`` can make ``engine`` compile.
+
+    Candidates are each item's prompt length AND its preemption-recompute
+    worst case (a preempted request replays prompt + generated-so-far as
+    one longer prompt, clamped to the cache), plus any ``extra`` lengths
+    the caller knows about (e.g. the shared system-prefix length).  Two
+    candidates that decompose into the same chunk shapes — same
+    has-continuation-chunks bit, same power-of-two bucket of the tail
+    chunk — compile the same code, so one representative (the longest,
+    which also walks the most continuation chunks) is kept per shape.
+    This is THE coverage rule: ``launch.serve`` and the bench's open-loop
+    sections both derive their warmup from it, so the launcher can never
+    again retrace on a shape the bench had warmed (the PR 7 follow-up).
+    """
+    from repro.serving.engine import _bucket
+
+    cap = engine.prefill_chunk or engine.max_len
+    cand = {int(n) for n in extra}
+    for it in trace:
+        p = len(it.prompt)
+        cand.add(p)
+        cand.add(min(p + int(it.max_new_tokens), engine.max_len - 1))
+    reps = {}
+    for n in sorted(cand):
+        if not 0 < n < engine.max_len:
+            continue
+        tail = n % cap or cap
+        key = (n > cap, _bucket(tail, cap))
+        reps[key] = n  # sorted iteration: keeps the longest per shape
+    return tuple(sorted(reps.values()))
 
 
 def warmup_prefill(engine, vocab_size: int,

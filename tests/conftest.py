@@ -1,0 +1,25 @@
+"""Suite-wide hygiene shared by every test module.
+
+The tier-1 suite compiles thousands of XLA executables in ONE process
+(nearly every test builds fresh ServingEngines, and each compiled
+executable pins several JIT code mappings).  Left alone, the process's
+memory-map count grows past ``vm.max_map_count`` (65530 by default)
+about two-thirds of the way through the suite, at which point mmap
+starts failing inside LLVM's JIT memory manager and XLA's
+``backend_compile`` segfaults — deterministically, at whichever test
+happens to cross the threshold (observed ~50k live mappings, dying in
+``test_spec_decode`` with the crash point shifting as the suite grows).
+
+Dropping compiled executables BETWEEN modules bounds the live set to
+one module's worth (a few thousand mappings), at the cost of
+recompilation across module boundaries — which the suite pays anyway,
+since engines and their jitted steps are built per-test.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_executables_between_modules():
+    yield
+    jax.clear_caches()

@@ -1,0 +1,218 @@
+"""ReplicaRouter: placement policies, admission folding, stream identity.
+
+The router's contract (PR 9 rung 2): N independent engines behind one
+``submit`` — affinity placement steers a prompt to the replica already
+holding its prefix blocks (same hash chain admission uses), rejection
+only surfaces when EVERY replica rejected (kind="breaker" iff all were
+breaker sheds), and the router never touches tokens (completed streams
+bit-identical to a solo engine).  The bench (serving_bench section 8)
+owns the affinity-beats-round-robin hit-rate claim; these tests pin the
+mechanisms it rests on.
+"""
+import asyncio
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+from repro.serving.frontend import RejectedError
+from repro.serving.openloop import TraceItem
+from repro.serving.router import (ROUTER_POLICIES, ReplicaRouter,
+                                  RouterStats, _FleetBreaker,
+                                  run_open_loop_router)
+from repro.serving.warmup import trace_prompt_lens, warmup_prefill
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(tiny, **over):
+    cfg, params = tiny
+    kw = dict(max_batch=3, max_len=32, mode="continuous", block_size=8,
+              num_blocks=24, prefill_chunk=8, prefix_cache=True,
+              eos_id=-1)
+    kw.update(over)
+    return ServingEngine(cfg, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Construction + policy validation
+# ---------------------------------------------------------------------------
+
+def test_rejects_unknown_policy_and_empty_fleet(tiny):
+    with pytest.raises(ValueError, match="at least one engine"):
+        ReplicaRouter([])
+    with pytest.raises(ValueError, match="not in"):
+        ReplicaRouter([_engine(tiny)], policy="sticky")
+    assert set(ROUTER_POLICIES) == {"affinity", "round_robin"}
+
+
+# ---------------------------------------------------------------------------
+# Placement ordering
+# ---------------------------------------------------------------------------
+
+def test_round_robin_cycles(tiny):
+    r = ReplicaRouter([_engine(tiny) for _ in range(3)],
+                      policy="round_robin")
+    prompt = np.arange(1, 9)
+    orders = [r._order(prompt, None) for _ in range(4)]
+    assert orders[0] == [0, 1, 2]
+    assert orders[1] == [1, 2, 0]
+    assert orders[2] == [2, 0, 1]
+    assert orders[3] == [0, 1, 2]  # wraps
+
+
+def test_affinity_prefers_replica_holding_prefix(tiny):
+    """Warm one replica's prefix cache with a prompt; a request sharing
+    its leading blocks must order that replica first, and the stats must
+    count it as an affinity hit."""
+    cfg, _ = tiny
+    warm, cold = _engine(tiny), _engine(tiny)
+    rng = np.random.default_rng(3)
+    system = rng.integers(1, cfg.vocab_size, size=16)
+    warm.submit(np.concatenate([system, [7, 8]]), max_new_tokens=2)
+    warm.run()
+    assert warm.match_cached_blocks(
+        np.concatenate([system, [9, 10, 11]])) > 0
+    r = ReplicaRouter([cold, warm], policy="affinity")
+    order = r._order(np.concatenate([system, [9, 10, 11]]), None)
+    assert order[0] == 1  # the warm replica, despite higher index
+    assert r.stats.affinity_hits == 1 and r.stats.affinity_eligible == 1
+    # A cold prompt is not affinity-eligible; ties break by load then
+    # index (both idle -> but warm holds live=0 after retire? both 0).
+    cold_order = r._order(rng.integers(1, cfg.vocab_size, size=6), None)
+    assert r.stats.affinity_eligible == 1  # unchanged
+    assert set(cold_order) == {0, 1}
+
+
+def test_affinity_falls_back_to_least_loaded(tiny):
+    r = ReplicaRouter([_engine(tiny), _engine(tiny)], policy="affinity")
+    # Fake load: replica 0 busy (queued work), replica 1 idle.
+    r.frontends[0].engine.submit(np.arange(1, 9), max_new_tokens=2)
+    assert r._load(0) >= 0
+    loads = [r._load(i) for i in range(2)]
+    order = r._order(np.arange(20, 26), None)
+    assert order[0] == int(np.argmin(loads))
+
+
+# ---------------------------------------------------------------------------
+# Rejection folding
+# ---------------------------------------------------------------------------
+
+def _reject_router(tiny, kinds):
+    r = ReplicaRouter([_engine(tiny) for _ in kinds])
+
+    def make_submit(kind):
+        async def submit(*a, **k):
+            raise RejectedError(f"nope ({kind})", kind=kind)
+        return submit
+
+    for fe, kind in zip(r.frontends, kinds):
+        fe.submit = make_submit(kind)
+    return r
+
+
+def test_all_breaker_rejections_fold_to_breaker(tiny):
+    r = _reject_router(tiny, ["breaker", "breaker"])
+    with pytest.raises(RejectedError) as ei:
+        asyncio.run(r.submit(np.arange(1, 6), max_new_tokens=2))
+    assert ei.value.kind == "breaker"
+    assert r.stats.rejected == 1 and r.stats.submitted == 0
+
+
+def test_mixed_rejections_fold_to_backpressure(tiny):
+    """One full queue among shedding replicas means 'retry later', not
+    'the fleet is down' — the folded kind must be backpressure."""
+    r = _reject_router(tiny, ["breaker", "backpressure"])
+    with pytest.raises(RejectedError) as ei:
+        asyncio.run(r.submit(np.arange(1, 6), max_new_tokens=2))
+    assert ei.value.kind == "backpressure"
+
+
+def test_spillover_counts_when_first_choice_rejects(tiny):
+    r = _reject_router(tiny, ["backpressure", "backpressure"])
+
+    async def accept(*a, **k):
+        return SimpleNamespace(uid=1)
+
+    r.frontends[1].submit = accept
+    stream = asyncio.run(r.submit(np.arange(1, 6), max_new_tokens=2))
+    assert stream.uid == 1
+    assert r.stats.spillovers == 1 and r.stats.submitted == 1
+    assert r.stats.per_replica == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# Fleet breaker aggregation
+# ---------------------------------------------------------------------------
+
+def test_fleet_breaker_aggregates_worst_state():
+    mk = lambda state, opens=1: SimpleNamespace(
+        opens=opens, shed=2, state=state, transitions=[(0.0, state)])
+    fb = _FleetBreaker([mk("closed"), mk("open")])
+    assert fb.state == "open"
+    assert fb.opens == 2 and fb.shed == 4
+    assert len(fb.transitions) == 2
+    assert _FleetBreaker([mk("closed"), mk("half_open")]).state \
+        == "half_open"
+    assert _FleetBreaker([mk("closed"), mk("closed")]).state == "closed"
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: streams bit-identical to a solo engine + routing report
+# ---------------------------------------------------------------------------
+
+def test_routed_streams_match_solo_engine(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(9)
+    system = rng.integers(1, cfg.vocab_size, size=8)
+    trace = []
+    for i in range(6):
+        tail = rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(3, 7)))
+        p = np.concatenate([system, tail]) if i % 2 else tail
+        trace.append(TraceItem(arrival_s=i * 0.05, prompt=p,
+                               max_new_tokens=3))
+    engines = [_engine(tiny) for _ in range(2)]
+    for e in engines:
+        warmup_prefill(e, cfg.vocab_size,
+                       prompt_lens=trace_prompt_lens(trace, e,
+                                                     extra=(len(system),)))
+    report, router = run_open_loop_router(engines, trace,
+                                          policy="affinity",
+                                          max_queue_depth=8)
+    recs = report.records
+    assert all(r.status == "completed" for r in recs)
+    ref = _engine(tiny)
+    uids = [ref.submit(it.prompt, max_new_tokens=it.max_new_tokens)
+            for it in trace]
+    ref_out = ref.run()
+    for uid, rec in zip(uids, recs):
+        assert rec.tokens == ref_out[uid], (
+            "routed stream diverged from solo-engine greedy")
+
+    rep = router.routing_report()
+    assert rep["policy"] == "affinity" and rep["replicas"] == 2
+    assert rep["submitted"] == 6 and rep["rejected"] == 0
+    assert sum(rep["per_replica_requests"]) == 6
+    assert 0.0 <= rep["affinity_hit_rate"] <= 1.0
+    assert 0.0 <= rep["prefix_hit_rate"] <= 1.0
+    assert rep["generated_tokens"] == sum(len(r.tokens) for r in recs)
+    # summary() works through the router's aggregate breaker view.
+    summary = report.summary(slo_ttft_s=30.0)
+    assert summary["completed"] == 6
+    assert summary["breaker"]["final_state"] == "closed"
+
+
+def test_router_stats_default_shape():
+    s = RouterStats()
+    assert (s.submitted, s.rejected, s.spillovers) == (0, 0, 0)
+    assert s.per_replica == []
