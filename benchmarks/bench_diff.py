@@ -17,7 +17,8 @@ sections are listed individually.
 The report ends with a ONE-LINE regression summary classifying every
 changed numeric leaf by metric direction (higher-is-better:
 ``tokens_per_s`` / ``goodput`` / ``hit_rate`` / ``acceptance_rate`` /
-``concurrency`` / ``speedup``; lower-is-better: ``ttft`` / ``itl`` /
+``concurrency`` / ``speedup`` / ``availability``; lower-is-better:
+``ttft`` / ``itl`` /
 other ``*_s`` latencies — SLO *configs* and counters are skipped), e.g.
 
   bench_diff summary: 7 improved, 2 regressed (worst: open_loop.moderate.client_p99_ttft_s +41.3%), 5 other changes
@@ -48,7 +49,7 @@ def _is_num(x):
 # order: a throughput rate like "goodput_req_s" is higher-is-better even
 # though it ends in "_s".
 _HIGHER = ("tokens_per_s", "goodput", "hit_rate", "acceptance_rate",
-           "concurrency", "speedup")
+           "concurrency", "speedup", "availability")
 _LOWER = ("ttft", "itl")
 
 

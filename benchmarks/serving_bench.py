@@ -95,6 +95,18 @@ CPU config:
        closed-loop ``run()``, and aggregate goodput is reported next to
        a 1-replica baseline.
 
+9. FAULT-TOLERANCE probe (PR 10): the same open-loop trace through a
+   3-replica fleet twice — clean, then with replica 0 wrapped in a
+   deterministic ``FaultPlan`` that crashes it mid-decode.  The router's
+   health tracker must declare the replica dead and fail its in-flight
+   requests over (resubmitted as prompt + already-emitted tokens, the
+   preemption-recompute path), so the chaos run is asserted to keep
+   availability at 1.0 with one dead replica AND to produce streams
+   bit-identical to the clean run — the failover tripwire CI trips on
+   under ``--smoke``.  Reported: availability, goodput under failure vs
+   clean, failover count, and the failover p99 TTFT (death -> first
+   replacement token) next to the clean/chaos client p99 TTFT delta.
+
 Reported: decode tokens/s, prefill tokens/s, mean TTFT, lane occupancy,
 mean concurrent requests, KV token utilization (can exceed 1.0 under
 sharing — lanes serve more context than the pool stores), prefix hit-rate
@@ -136,6 +148,7 @@ from repro.configs.base import get_config
 from repro.models import kv_quant
 from repro.models import model as M
 from repro.serving.engine import EngineStats, ServingEngine
+from repro.serving.faults import FaultPlan, FaultyEngine
 from repro.serving.frontend import CircuitBreaker
 from repro.serving.openloop import TraceItem, poisson_trace, run_open_loop
 from repro.serving.router import run_open_loop_router
@@ -339,6 +352,16 @@ BENCH_SCHEMA = [
     ("scale_out.router.round_robin.goodput_req_s", _NUM),
     ("scale_out.router.single.goodput_req_s", _NUM),
     ("scale_out.router.streams_identical_to_solo", bool),
+    ("fault_tolerance.replicas", int),
+    ("fault_tolerance.crash_tick", int),
+    ("fault_tolerance.availability", _NUM),
+    ("fault_tolerance.replica_deaths", int),
+    ("fault_tolerance.failovers", int),
+    ("fault_tolerance.outputs_identical_to_clean", bool),
+    ("fault_tolerance.clean_goodput_req_s", _NUM),
+    ("fault_tolerance.failure_goodput_req_s", _NUM),
+    ("fault_tolerance.failover_p99_ttft_s", _NUM),
+    ("fault_tolerance.client_p99_ttft_delta_s", _NUM),
 ]
 
 
@@ -346,8 +369,8 @@ def validate_bench(bench: dict) -> None:
     """Structural gate on the artifact: every schema path must exist and
     hold the right type, every number must be finite and >= 0 (a NaN
     percentile is a bug upstream, not a value to archive), and rates
-    (paths ending ``acceptance_rate``) must additionally be <= 1.
-    Raises ``ValueError`` listing ALL problems."""
+    (paths ending ``acceptance_rate`` or ``availability``) must
+    additionally be <= 1.  Raises ``ValueError`` listing ALL problems."""
     problems = []
     missing = object()
     for path, typ in BENCH_SCHEMA:
@@ -370,7 +393,8 @@ def validate_bench(bench: dict) -> None:
         elif isinstance(node, _NUM) and not isinstance(node, bool):
             if not np.isfinite(node) or node < 0:
                 problems.append(f"non-finite/negative: {path} = {node!r}")
-            elif path.endswith("acceptance_rate") and node > 1:
+            elif path.endswith(("acceptance_rate", "availability")) \
+                    and node > 1:
                 problems.append(f"rate > 1: {path} = {node!r}")
     if problems:
         raise ValueError("BENCH_serving.json schema violations:\n  "
@@ -791,6 +815,69 @@ def run(smoke: bool = False, json_path: str | None = None,
                  f"goodput1={one_sum['goodput']['goodput_req_s']:.2f}req/s "
                  f"streams_identical=True"))
 
+    # -- 9. fault tolerance: crash one replica mid-decode, fail over ---------
+    # The same trace through a 3-replica round-robin fleet twice: clean,
+    # then with replica 0 under a deterministic crash plan (engine-step
+    # clock, so warmup never consumes it — engines wrap AFTER priming).
+    # Round-robin keeps placement identical across the two runs; greedy
+    # sampling plus the emitted-prefix resubmission makes every failed-
+    # over stream bit-identical to its clean twin, which is the assert.
+    # Prompt 9-12 + budget 4 keeps failover recompute prompts (prompt +
+    # emitted, always < prompt + budget) inside the one warmed 16-token
+    # chunk bucket.
+    ft_n = 6 if smoke else 10
+    rng9 = np.random.default_rng(31)
+    ft_trace = [TraceItem(arrival_s=float(i) * 1e-2,
+                          prompt=rng9.integers(
+                              1, cfg.vocab_size,
+                              size=int(rng9.integers(9, 13))),
+                          max_new_tokens=4)
+                for i in range(ft_n)]
+
+    def ft_engines():
+        engines = []
+        for _ in range(3):
+            e = ServingEngine(cfg, params, max_len=MAX_LEN, eos_id=-1,
+                              **rt_pool)
+            warmup_prefill(e, cfg.vocab_size,
+                           prompt_lens=trace_prompt_lens(ft_trace, e))
+            engines.append(e)
+        return engines
+
+    ft_clean_rep, _ = run_open_loop_router(
+        ft_engines(), ft_trace, policy="round_robin",
+        max_queue_depth=ft_n)
+    assert all(r.status == "completed" for r in ft_clean_rep.records)
+    ft_crash_tick = 4
+    chaos = ft_engines()
+    chaos[0] = FaultyEngine(chaos[0], FaultPlan.crash_at(ft_crash_tick))
+    ft_chaos_rep, ft_router = run_open_loop_router(
+        chaos, ft_trace, policy="round_robin", max_queue_depth=ft_n)
+    assert chaos[0].crashed, "the crash plan must actually fire"
+    assert ft_router.stats.replica_deaths == 1
+    assert ft_router.stats.failovers >= 1, (
+        "the crash must strand in-flight requests for failover to rescue")
+    assert ft_chaos_rep.availability == 1.0, (
+        f"every request must complete via failover with one replica dead "
+        f"(statuses: {[r.status for r in ft_chaos_rep.records]})")
+    assert [r.tokens for r in ft_chaos_rep.records] \
+        == [r.tokens for r in ft_clean_rep.records], (
+        "failed-over streams must be bit-identical to the clean run")
+    ft_clean_sum = ft_clean_rep.summary(slo)
+    ft_chaos_sum = ft_chaos_rep.summary(slo)
+    ft_fault = ft_chaos_sum["fault_tolerance"]
+    ft_ttft_delta = max(0.0, ft_chaos_sum["client_p99_ttft_s"]
+                        - ft_clean_sum["client_p99_ttft_s"])
+    rows.append(("serving/fault_tolerance", 0.0,
+                 f"replicas=3 crash_tick={ft_crash_tick} "
+                 f"availability={ft_chaos_rep.availability:.2f} "
+                 f"deaths={ft_fault['replica_deaths']} "
+                 f"failovers={ft_fault['failovers']} "
+                 f"goodput_clean={ft_clean_sum['goodput']['goodput_req_s']:.2f}req/s "
+                 f"goodput_failure={ft_chaos_sum['goodput']['goodput_req_s']:.2f}req/s "
+                 f"failover_p99_ttft={ft_fault['failover_p99_ttft_s'] * 1e3:.0f}ms "
+                 f"bit_identical_to_clean=True"))
+
     # -- machine-readable summary (CI artifact) ------------------------------
     bench.update({
         "decode_tokens_per_s": {m: stats[m].tokens_per_s for m in stats},
@@ -936,6 +1023,29 @@ def run(smoke: bool = False, json_path: str | None = None,
                 },
                 "streams_identical_to_solo": True,
             },
+        },
+        # Fault-tolerance posture (PR 10): one replica crashed mid-decode
+        # under a deterministic fault plan; failover must hold
+        # availability at 1.0 with streams bit-identical to the clean
+        # run.  The schema gate pins these paths, so CI trips if the
+        # failover path ever degrades.
+        "fault_tolerance": {
+            "replicas": 3,
+            "crash_tick": ft_crash_tick,
+            "trace_requests": ft_n,
+            "availability": ft_chaos_rep.availability,
+            "replica_deaths": ft_fault["replica_deaths"],
+            "failovers": ft_fault["failovers"],
+            "retries": ft_fault["retries"],
+            "health": ft_fault["health"],
+            "outputs_identical_to_clean": True,
+            "clean_goodput_req_s":
+                ft_clean_sum["goodput"]["goodput_req_s"],
+            "failure_goodput_req_s":
+                ft_chaos_sum["goodput"]["goodput_req_s"],
+            "failover_p50_ttft_s": ft_fault["failover_p50_ttft_s"],
+            "failover_p99_ttft_s": ft_fault["failover_p99_ttft_s"],
+            "client_p99_ttft_delta_s": ft_ttft_delta,
         },
     })
     # Structural gate before the artifact leaves the process: CI uploads

@@ -243,6 +243,62 @@ def main():
               f"affinity_hit_rate={rep['affinity_hit_rate']:.2f} "
               f"prefix_hit_rate={rep['prefix_hit_rate']:.2f}")
 
+    # 5. Surviving failures.  Replicas die; the fleet should not drop
+    # requests when they do.  Three pieces compose:
+    #
+    #   FAULT INJECTION (serving.faults): FaultyEngine wraps any engine
+    #   and injects a seeded FaultPlan — crash (permanent death), hang
+    #   (a step that "takes" N ticks), raise (transient exception), slow
+    #   (skipped beats) — at the step() BOUNDARY only, counted in step
+    #   ticks, never wall clock.  The same plan replays the same chaos
+    #   bit-for-bit, so every failure scenario is a deterministic test
+    #   (FaultPlan.seeded(seed) draws a reproducible schedule).
+    #
+    #   HEALTH TRACKING (serving.router.ReplicaHealth): each replica
+    #   walks healthy -> suspect -> dead from tick-counted signals — a
+    #   step whose cost exceeds deadline_ticks trips the watchdog, and
+    #   crash_threshold consecutive step errors declare death.  Suspect
+    #   replicas take only a probe request (success revives them);
+    #   dead and router.drain(i)'d replicas are excluded from placement
+    #   (drain also lets you take a replica down for maintenance and
+    #   undrain(i) it back).
+    #
+    #   BIT-IDENTICAL FAILOVER: when a replica dies, its in-flight
+    #   requests are resubmitted to a healthy replica as
+    #   prompt + tokens-already-emitted — the same recompute path
+    #   preemption uses — and the client's TokenStream continues
+    #   SEAMLESSLY from the next token: no duplicates, no gaps, and the
+    #   completed greedy output is bit-identical to a failure-free run.
+    #   Each request retries at most retry_budget times before its
+    #   stream surfaces RejectedError(kind="timeout").
+    if eng.mode == "continuous":
+        import asyncio
+
+        from repro.serving.faults import FaultPlan, FaultyEngine
+        from repro.serving.router import ReplicaRouter
+
+        async def chaos_demo():
+            # Replica 0 will crash at step tick 2 — mid-decode for the
+            # request below; replica 1 stays healthy as failover target.
+            doomed = FaultyEngine(make_replica(), FaultPlan.crash_at(2))
+            async with ReplicaRouter([doomed, make_replica()],
+                                     policy="round_robin") as router:
+                stream = await router.submit(np.arange(4, 12),
+                                             max_new_tokens=6)
+                toks = [t async for t in stream]
+                return toks, router.fault_report()
+
+        toks, ft = asyncio.run(chaos_demo())
+        print(f"failover: tokens={toks} "
+              f"deaths={ft['replica_deaths']} "
+              f"failovers={ft['failovers']} "
+              f"health={ft['health']}")
+        # The launcher exposes the same chaos knobs end to end:
+        #   python -m repro.launch.serve --frontend async --replicas 3 \
+        #       --fault-crash-replica 0 --fault-crash-tick 24 \
+        #       [--fault-seed 7] [--drain-replica 2] [--retry-budget 3]
+        # and its report gains availability + fault_tolerance blocks.
+
 
 if __name__ == "__main__":
     main()

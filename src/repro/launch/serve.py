@@ -12,6 +12,13 @@ goodput under ``--slo-ttft``:
 
   PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
       --reduced --frontend async --arrival-rate 8 --max-queue-depth 8
+
+With ``--replicas N`` the trace runs against a fault-tolerant fleet:
+``--fault-crash-replica`` / ``--fault-seed`` inject deterministic
+replica failures (the router fails in-flight requests over, bit-identical
+under greedy sampling) and ``--drain-replica`` starts one replica
+administratively drained — the run's ``fault_tolerance`` block reports
+deaths, failovers, and failover TTFT percentiles.
 """
 from __future__ import annotations
 
@@ -26,6 +33,7 @@ from repro.configs.base import get_config, list_archs
 from repro.models import kv_quant
 from repro.models import model as M
 from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultPlan, FaultyEngine
 from repro.serving.frontend import CircuitBreaker
 from repro.serving.openloop import poisson_trace, run_open_loop
 from repro.serving.router import ROUTER_POLICIES, run_open_loop_router
@@ -173,6 +181,29 @@ def main():
                     help="[async, --replicas > 1] placement policy: "
                          "'affinity' (prefix-cache match, then "
                          "least-loaded) or the 'round_robin' baseline")
+    ap.add_argument("--fault-crash-replica", type=int, default=None,
+                    help="[async, --replicas > 1] kill this replica "
+                         "mid-run: its engine crashes at "
+                         "--fault-crash-tick and the router fails its "
+                         "in-flight requests over (outputs stay "
+                         "bit-identical under greedy sampling)")
+    ap.add_argument("--fault-crash-tick", type=int, default=24,
+                    help="[async] engine-step index at which "
+                         "--fault-crash-replica dies (deterministic: "
+                         "idle pump ticks do not advance it)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="[async] wrap every replica in a seeded chaos "
+                         "plan (transient hangs / step errors / "
+                         "slowdowns, no crashes; replica i uses "
+                         "seed + i) — same seed replays the same faults")
+    ap.add_argument("--drain-replica", type=int, default=None,
+                    help="[async, --replicas > 1] start with this "
+                         "replica administratively drained: it takes no "
+                         "placements while its peers serve the trace")
+    ap.add_argument("--retry-budget", type=int, default=3,
+                    help="[async] max failover re-homings per request "
+                         "after replica deaths; exhaustion ends the "
+                         "stream with a timeout-kind rejection")
     args = ap.parse_args()
 
     if args.replicas < 1:
@@ -180,6 +211,17 @@ def main():
     if args.replicas > 1 and args.frontend != "async":
         raise SystemExit("--replicas requires --frontend async (the "
                          "router fronts AsyncFrontend replicas)")
+    for flag, val in (("--fault-crash-replica", args.fault_crash_replica),
+                      ("--drain-replica", args.drain_replica)):
+        if val is not None:
+            if args.replicas < 2:
+                raise SystemExit(f"{flag} needs --replicas >= 2 (a peer "
+                                 f"must absorb the traffic)")
+            if not 0 <= val < args.replicas:
+                raise SystemExit(f"{flag} {val} out of range for "
+                                 f"--replicas {args.replicas}")
+    if args.fault_seed is not None and args.frontend != "async":
+        raise SystemExit("--fault-seed requires --frontend async")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -223,6 +265,21 @@ def main():
         for e in engines:
             warmup_prefill(e, cfg.vocab_size, prompt_lens=lens)
 
+        # Fault injection wraps AFTER warmup so the plan's step clock
+        # starts at the trace, not at cache priming.
+        plans = {}
+        if args.fault_seed is not None:
+            for i in range(len(engines)):
+                plans[i] = FaultPlan.seeded(args.fault_seed + i)
+        if args.fault_crash_replica is not None:
+            i = args.fault_crash_replica
+            plans[i] = plans.get(i, FaultPlan()) \
+                + FaultPlan.crash_at(args.fault_crash_tick)
+        if plans:
+            engines = [FaultyEngine(e, plans[i]) if i in plans else e
+                       for i, e in enumerate(engines)]
+        engine = engines[0]
+
         def breaker():
             return CircuitBreaker(
                 window=args.breaker_window,
@@ -235,9 +292,15 @@ def main():
             report, router = run_open_loop_router(
                 engines, trace, policy=args.router_policy,
                 max_queue_depth=args.max_queue_depth,
-                breaker_factory=breaker)
+                breaker_factory=breaker,
+                retry_budget=args.retry_budget,
+                drain=() if args.drain_replica is None
+                else (args.drain_replica,))
             out = report.summary(args.slo_ttft)
             out["routing"] = router.routing_report()
+            if plans:
+                out["fault_plans"] = {
+                    str(i): p.describe() for i, p in sorted(plans.items())}
             print(json.dumps(out, indent=2))
             return
         report = run_open_loop(engine, trace,

@@ -483,6 +483,11 @@ class ServingEngine:
         self.pad_id = pad_id
         self.sampler = sampler or SamplerConfig()
         self.stats = EngineStats()
+        #: Poisoned-engine flag (see ``step()``): True once a failing
+        #: step left the ``BlockStore`` inconsistent.  A poisoned engine
+        #: refuses step()/submit() — its pool may hold half-applied
+        #: state — and its replica must be failed over, not retried.
+        self.poisoned = False
         self._queue: List[Request] = []
         self._instant: List[Tuple[int, List[int]]] = []  # zero-budget retires
         #: uid -> submit wall time, consumed when its first token lands.
@@ -566,6 +571,10 @@ class ServingEngine:
         request's image frontend — its digest seeds the prefix-cache hash
         chain, so only requests with the SAME image (or both the zero
         stub) can share prefix blocks."""
+        if self.poisoned:
+            raise RuntimeError(
+                "engine is poisoned: an earlier step() failure left the "
+                "block store inconsistent; build a fresh engine")
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) >= self.max_len:
             # Same bound in both modes (and regardless of budget): wave
@@ -661,11 +670,36 @@ class ServingEngine:
         the youngest request (see module docstring).
 
         Returns the requests finished this iteration as (uid, tokens).
+
+        Exception safety — the POISONED-ENGINE contract: when the step
+        body raises, the engine re-checks the ``BlockStore`` invariants
+        before re-raising.  If they hold, the failure was transient and
+        the engine stays usable (every request keeps its lane/blocks; the
+        next ``step()`` resumes where this one stopped).  If they do NOT
+        hold, the engine marks itself ``poisoned`` and every later
+        ``step()``/``submit()`` raises immediately — a half-applied
+        scheduler iteration must never be stepped again (it could serve
+        corrupt KV), and the caller (the replica router's health layer)
+        must fail its requests over to a healthy replica instead.
         """
         if self.mode != "continuous":
             raise RuntimeError(
                 f"step() requires mode='continuous' (engine is in "
                 f"{self.mode!r} mode); use run()")
+        if self.poisoned:
+            raise RuntimeError(
+                "engine is poisoned: an earlier step() failure left the "
+                "block store inconsistent; build a fresh engine")
+        try:
+            return self._step()
+        except Exception:
+            try:
+                self._alloc.check_invariants()
+            except Exception:
+                self.poisoned = True
+            raise
+
+    def _step(self) -> List[Tuple[int, List[int]]]:
         finished: List[Tuple[int, List[int]]] = list(self._instant)
         self._instant = []
         self._admit()

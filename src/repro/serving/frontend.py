@@ -28,6 +28,15 @@ layer:
     flight (accepted but not finished); ``submit`` beyond it raises
     ``RejectedError(kind="backpressure")`` — the 503 the caller retries
     with backoff instead of queueing unboundedly.
+  * **timeouts + fault surface**: ``submit(timeout_s=...)`` bounds a
+    request's wall-clock life — expiry cancels it (blocks released) and
+    its stream raises ``RejectedError(kind="timeout")``.  A raising
+    ``engine.step()`` no longer kills the pump: the error is counted
+    (``stats.step_errors``), reported to ``tick_observer`` (the replica
+    router's per-replica health tap — see ``serving.router``), and after
+    ``max_step_errors`` CONSECUTIVE failures a solo frontend declares
+    the engine dead and fails its in-flight streams; under a router the
+    health tracker reacts first and fails the requests over instead.
   * **load shedding**: a closed/open/half-open ``CircuitBreaker`` watches
     every scheduler tick's preemption delta and pool saturation.  Too
     much pressure inside a sliding window trips it OPEN — submits raise
@@ -53,10 +62,11 @@ Typical use::
 from __future__ import annotations
 
 import asyncio
+import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -73,8 +83,11 @@ class RejectedError(RuntimeError):
     """503-style admission rejection.
 
     ``kind`` is "backpressure" (queue depth at ``max_queue_depth`` —
-    retry with backoff) or "breaker" (circuit breaker shedding load —
-    back off harder; the service is saturated)."""
+    retry with backoff), "breaker" (circuit breaker shedding load —
+    back off harder; the service is saturated) or "timeout" (the request
+    exceeded its per-request wall-clock budget, or its failover retry
+    budget after replica deaths — raised from the STREAM, not from
+    ``submit``, since the request was admitted before it expired)."""
 
     def __init__(self, reason: str, kind: str):
         super().__init__(reason)
@@ -186,6 +199,12 @@ class FrontendStats:
     errors: int = 0  # engine-side submit validation failures
     rejected_backpressure: int = 0
     shed_breaker: int = 0
+    #: Requests ended by their per-request wall-clock timeout (their
+    #: streams raised RejectedError(kind="timeout")).
+    timeouts: int = 0
+    #: Scheduler ticks whose engine.step() raised (the crash-detection
+    #: signal the replica router's health tracker consumes).
+    step_errors: int = 0
 
 
 @dataclass
@@ -205,6 +224,29 @@ class _Ticket:
     #: equal exactly what was streamed; the no-token-loss property tests
     #: pin on it.
     result: Optional[List[int]] = None
+    #: Tokens DELIVERED to the stream's queue so far (consumed by the
+    #: client or not).  Failover resubmits prompt + emitted, so exactly
+    #: these tokens are never generated — or streamed — twice.
+    emitted: List[int] = field(default_factory=list)
+    #: Wall-clock budget: the request times out ``timeout_s`` seconds
+    #: after submit (checked each dispatch against ``expires_at``).
+    timeout_s: Optional[float] = None
+    expires_at: Optional[float] = None  # time.monotonic() deadline
+    #: Failover retry count (router-owned): how many times this request
+    #: has been re-homed after a replica death.
+    retries: int = 0
+    #: Set when the request was failed over: (frontend, ticket) of the
+    #: live incarnation.  Its queue is ALIASED to this ticket's queue, so
+    #: the client's stream continues seamlessly; cancel/done resolve
+    #: through the chain (``TokenStream._live``).
+    successor: Optional[tuple] = None
+    #: Completion tap (router health probes, failover latency): called
+    #: with True (completed), False (errored) or None (cancelled/timed
+    #: out) exactly once, on the event loop.
+    on_done: Optional[Callable[[Optional[bool]], None]] = None
+    #: One-shot tap fired when the ticket's FIRST token is dispatched
+    #: (failover latency measurement).
+    on_first_token: Optional[Callable[[], None]] = None
 
 
 class TokenStream:
@@ -242,17 +284,28 @@ class TokenStream:
             pass
         return self.tokens
 
+    def _live(self) -> Tuple["AsyncFrontend", _Ticket]:
+        """The request's live incarnation: failover re-homes a request
+        onto another frontend's ticket (queue aliased back to ours), so
+        cancel/uid/done must resolve through the successor chain."""
+        fe, t = self._fe, self._ticket
+        while t.successor is not None:
+            fe, t = t.successor
+        return fe, t
+
     async def aclose(self) -> None:
-        self._fe._cancel_ticket(self._ticket)
+        fe, t = self._live()
+        fe._cancel_ticket(t)
 
     @property
     def uid(self) -> Optional[int]:
-        """Engine uid (None until the pump has submitted the request)."""
-        return self._ticket.uid
+        """Engine uid of the LIVE incarnation (None until its pump has
+        submitted the request; changes if the request is failed over)."""
+        return self._live()[1].uid
 
     @property
     def done(self) -> bool:
-        return self._ticket.done
+        return self._live()[1].done
 
 
 class AsyncFrontend:
@@ -266,7 +319,8 @@ class AsyncFrontend:
 
     def __init__(self, engine: ServingEngine, max_queue_depth: int = 64,
                  breaker: Optional[CircuitBreaker] = None,
-                 idle_sleep_s: float = 0.001):
+                 idle_sleep_s: float = 0.001,
+                 max_step_errors: int = 8):
         if engine.mode != "continuous":
             raise ValueError(
                 f"AsyncFrontend requires a continuous-mode engine (got "
@@ -274,11 +328,30 @@ class AsyncFrontend:
                 f"pump")
         if max_queue_depth < 1:
             raise ValueError("max_queue_depth must be >= 1")
+        if max_step_errors < 1:
+            raise ValueError("max_step_errors must be >= 1")
         self.engine = engine
         self.max_queue_depth = max_queue_depth
         self.breaker = breaker or CircuitBreaker()
         self.idle_sleep_s = idle_sleep_s
+        #: Consecutive erroring ticks after which a SOLO frontend gives
+        #: the engine up for dead and fails its in-flight streams (a
+        #: router-managed frontend never reaches this: the router's
+        #: health tracker declares death first and takes the tickets for
+        #: failover).
+        self.max_step_errors = max_step_errors
         self.stats = FrontendStats()
+        #: Per-tick observer (the replica router's health tap): called
+        #: once per pump tick, on the event loop, with
+        #: ``{"error": exc-or-None, "cost_ticks": int}`` — the step's
+        #: outcome and its virtual duration (``engine.last_step_cost``
+        #: when present, e.g. under fault injection; else 1).
+        self.tick_observer: Optional[Callable[[dict], None]] = None
+        self._last_tick_info: Optional[dict] = None
+        self.last_step_error: Optional[BaseException] = None
+        self._consec_step_errors = 0
+        self._engine_dead = False
+        self._halt = False
         self._tickets = 0
         #: ticket id -> ticket, accepted and not yet finished/cancelled —
         #: len() of this is the backpressure queue depth.
@@ -337,8 +410,8 @@ class AsyncFrontend:
 
     async def submit(self, prompt, max_new_tokens: int = 32, *,
                      deadline: Optional[float] = None, priority: int = 0,
-                     patch_embeds: Optional[np.ndarray] = None
-                     ) -> TokenStream:
+                     patch_embeds: Optional[np.ndarray] = None,
+                     timeout_s: Optional[float] = None) -> TokenStream:
         """Admit one request and return its token stream.
 
         Raises ``RejectedError`` when the in-flight window is full
@@ -346,9 +419,16 @@ class AsyncFrontend:
         (``kind="breaker"``).  Engine-side validation failures (prompt
         too long for the cache, bad patch shape, ...) surface as the
         original ``ValueError`` out of the stream's first ``__anext__``.
+
+        ``timeout_s`` is a per-request WALL-CLOCK budget: if the request
+        has not completed ``timeout_s`` seconds after this call, it is
+        cancelled (blocks released) and its stream raises
+        ``RejectedError(kind="timeout")``.
         """
         if self._stopped or not self._running:
             raise RuntimeError("frontend is stopped")
+        if timeout_s is not None and timeout_s <= 0.0:
+            raise ValueError(f"timeout_s must be > 0, got {timeout_s}")
         depth = len(self._inflight)
         if depth >= self.max_queue_depth:
             self.stats.rejected_backpressure += 1
@@ -367,6 +447,9 @@ class AsyncFrontend:
                     max_new_tokens,
                     self._effective_deadline(deadline, priority),
                     patch_embeds, asyncio.Queue(), probe=probe)
+        if timeout_s is not None:
+            t.timeout_s = timeout_s
+            t.expires_at = time.monotonic() + timeout_s
         self._inflight[t.id] = t
         self._pending.append(t)
         self.stats.accepted += 1
@@ -395,9 +478,60 @@ class AsyncFrontend:
         self.stats.cancelled += 1
         if t.probe:
             self.breaker.abandon_probe()
+        if t.on_done is not None:
+            t.on_done(None)
         self._cancels.append(t)
         t.queue.put_nowait(_DONE)  # unblock a waiting consumer now
         self._wake.set()
+
+    def _timeout_ticket(self, t: _Ticket) -> None:
+        """The request outlived its wall-clock budget: cancel the engine
+        side, end the stream with ``RejectedError(kind="timeout")``."""
+        if t.done or t.cancelled:
+            return
+        t.cancelled = True
+        self._inflight.pop(t.id, None)
+        self.stats.timeouts += 1
+        if t.probe:
+            self.breaker.abandon_probe()
+        if t.on_done is not None:
+            t.on_done(None)
+        self._cancels.append(t)
+        t.queue.put_nowait(RejectedError(
+            f"request exceeded its {t.timeout_s}s wall-clock timeout",
+            kind="timeout"))
+        self._wake.set()
+
+    # -- failover hand-off (router-owned) ------------------------------------
+    def take_inflight(self) -> List[_Ticket]:
+        """Detach every in-flight ticket WITHOUT ending its stream.
+
+        The router's failover path: the returned tickets will be
+        resubmitted on a healthy replica with their queues kept open, so
+        nothing here may push ``_DONE`` or an error.  Engine-side state
+        (lanes, blocks) is NOT touched — the caller owns that cleanup
+        (``engine.cancel`` per ticket uid)."""
+        out = [t for t in self._inflight.values()
+               if not t.done and not t.cancelled]
+        self._inflight.clear()
+        self._pending.clear()
+        self._by_uid.clear()
+        return out
+
+    async def halt(self) -> None:
+        """Hard-stop the pump without draining or cancelling tickets —
+        a dead replica cannot drain (its ``step()`` raises forever).
+        Idempotent; used by the router after ``take_inflight()``."""
+        if self._stopped:
+            return
+        self._halt = True
+        self._running = False
+        self._wake.set()
+        if self._pump_task is not None:
+            await self._pump_task
+        self._executor.shutdown(wait=True)
+        self.engine.on_token = None
+        self._stopped = True
 
     # -- pump ----------------------------------------------------------------
     def _on_token(self, uid: int, token: int) -> None:
@@ -428,9 +562,28 @@ class AsyncFrontend:
                 continue
             self._by_uid[t.uid] = t
         p0 = eng.stats.preemptions
-        finished = eng.step() if eng.has_pending_work() else []
+        err: Optional[BaseException] = None
+        try:
+            finished = eng.step() if eng.has_pending_work() else []
+        except Exception as e:
+            # A raising step must not kill the pump: the engine's
+            # poisoned contract keeps the BlockStore consistent (or the
+            # engine refuses further steps), and the health layer — not
+            # an exception unwind — decides the replica's fate.
+            err, finished = e, []
+            self.stats.step_errors += 1
+            self.last_step_error = e
+            self._consec_step_errors += 1
+            if self._consec_step_errors >= self.max_step_errors:
+                self._engine_dead = True
+        else:
+            self._consec_step_errors = 0
         self.breaker.record_tick(eng.stats.preemptions - p0,
                                  eng.pool_saturation)
+        self._last_tick_info = {
+            "error": err,
+            "cost_ticks": int(getattr(eng, "last_step_cost", 1)),
+        }
         return finished
 
     def _dispatch(self, finished: List[Tuple[int, List[int]]]) -> None:
@@ -440,7 +593,11 @@ class AsyncFrontend:
             if kind == "tok":
                 t = self._by_uid.get(a)
                 if t is not None and not t.cancelled:
+                    t.emitted.append(b)
                     t.queue.put_nowait(b)
+                    if t.on_first_token is not None:
+                        cb, t.on_first_token = t.on_first_token, None
+                        cb()
             else:  # "err"
                 t = a
                 if t.cancelled:
@@ -450,6 +607,8 @@ class AsyncFrontend:
                 self.stats.errors += 1
                 if t.probe:
                     self.breaker.abandon_probe()
+                if t.on_done is not None:
+                    t.on_done(False)
                 t.queue.put_nowait(b)
         for uid, toks in finished:
             t = self._by_uid.pop(uid, None)
@@ -460,9 +619,30 @@ class AsyncFrontend:
             self.stats.completed += 1
             if t.probe:
                 self.breaker.record_probe_end(ok=True)
+            if t.on_done is not None:
+                t.on_done(True)
             t.queue.put_nowait(_DONE)
+        if any(t.expires_at is not None for t in self._inflight.values()):
+            now = time.monotonic()
+            for t in [t for t in self._inflight.values()
+                      if t.expires_at is not None and now >= t.expires_at]:
+                self._timeout_ticket(t)
+        if self._engine_dead and self.tick_observer is None \
+                and self._inflight:
+            # Solo frontend on a dead engine: nobody will fail these
+            # requests over, so surface the failure instead of hanging.
+            self._fail_all(RuntimeError(
+                f"engine unresponsive: {self.max_step_errors} consecutive "
+                f"step failures (last: {self.last_step_error!r})"))
+        info, self._last_tick_info = self._last_tick_info, None
+        if info is not None and self.tick_observer is not None:
+            self.tick_observer(info)
 
     def _has_engine_work(self) -> bool:
+        if self._engine_dead:
+            # Stop ticking a dead engine (its step raises forever); the
+            # pump idles so stop()/halt() can complete.
+            return False
         return bool(self._pending or self._cancels
                     or self.engine.has_pending_work())
 
@@ -470,6 +650,8 @@ class AsyncFrontend:
         loop = asyncio.get_running_loop()
         try:
             while True:
+                if self._halt:
+                    break
                 if not self._has_engine_work() \
                         and self.breaker.state == "closed":
                     if not self._running:

@@ -53,7 +53,10 @@ class TraceItem:
 class RequestRecord:
     """Client-side outcome of one trace item."""
     arrival_s: float          # scheduled offset from trace start
-    status: str = "pending"   # completed | rejected | shed | error
+    #: completed | rejected | shed | timeout | error — "timeout" is a
+    #: mid-stream RejectedError(kind="timeout") (per-request wall-clock
+    #: budget or failover retry budget exhausted).
+    status: str = "pending"
     submit_t: float = 0.0     # wall perf_counter at submit
     token_t: List[float] = field(default_factory=list)
     tokens: List[int] = field(default_factory=list)
@@ -129,6 +132,12 @@ async def drive(frontend: AsyncFrontend,
                 rec.token_t.append(time.perf_counter())
                 rec.tokens.append(tok)
             rec.status = "completed"
+        except RejectedError as e:
+            # Mid-stream rejection: the request was admitted but ended by
+            # its wall-clock timeout or the failover retry budget.
+            rec.status = "timeout" if e.kind == "timeout" else "shed" \
+                if e.kind == "breaker" else "rejected"
+            rec.error = str(e)
         except Exception as e:
             rec.status = "error"
             rec.error = f"{type(e).__name__}: {e}"
@@ -150,6 +159,13 @@ class OpenLoopReport:
     def count(self, status: str) -> int:
         return sum(1 for r in self.records if r.status == status)
 
+    @property
+    def availability(self) -> float:
+        """Completed requests over all arrivals — the fleet-level uptime
+        number chaos runs gate on (a dead replica must not cost the
+        trace's completions; failover keeps availability at 1.0)."""
+        return self.count("completed") / max(len(self.records), 1)
+
     def goodput_under_slo(self, slo_ttft_s: float) -> Dict[str, float]:
         """Requests that completed AND met the client-side TTFT SLO,
         normalized per wall-clock second (requests and tokens)."""
@@ -170,12 +186,14 @@ class OpenLoopReport:
                  if r.ttft_s is not None]
         itls = [g for r in self.completed() for g in r.itl_s]
         br = self.frontend.breaker
-        return {
+        out = {
             "requests": len(self.records),
             "completed": self.count("completed"),
             "rejected_backpressure": self.count("rejected"),
             "shed_breaker": self.count("shed"),
+            "timeouts": self.count("timeout"),
             "errors": self.count("error"),
+            "availability": self.availability,
             "wall_s": self.wall_s,
             "client_p50_ttft_s": pct(ttfts, 50.0),
             "client_p99_ttft_s": pct(ttfts, 99.0),
@@ -189,6 +207,13 @@ class OpenLoopReport:
                 "transitions": [list(t) for t in br.transitions],
             },
         }
+        # Fleet frontends (ReplicaRouter) carry fault-tolerance counters
+        # — failovers, replica deaths, watchdog trips, retries, drains —
+        # threaded into the summary when present.
+        ft = getattr(self.frontend, "fault_report", None)
+        if callable(ft):
+            out["fault_tolerance"] = ft()
+        return out
 
 
 def run_open_loop(engine: ServingEngine, trace: Sequence[TraceItem], *,

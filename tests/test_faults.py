@@ -1,0 +1,485 @@
+"""Fault injection, replica health, and bit-identical failover (PR 10).
+
+Three layers, pinned bottom-up:
+
+  * ``serving.faults`` — ``FaultPlan`` schedules are immutable, seeded
+    plans replay identically, and ``FaultyEngine`` injects each kind at
+    the engine-step boundary with the documented semantics (crash is
+    forever, hang is one stalled step with a virtual cost, raise is
+    transient, slow skips beats) while delegating everything else.
+  * health — ``ReplicaHealth`` walks healthy -> suspect -> dead exactly
+    as documented (watchdog trips suspect, only CONSECUTIVE errors kill,
+    probes revive), the engine's poisoned-step contract refuses work
+    after an inconsistent failure, and per-request wall-clock timeouts
+    surface as ``RejectedError(kind="timeout")`` from the stream.
+  * failover — a dead replica's in-flight requests are re-homed with
+    their emitted prefix deduped, so the client stream completes
+    BIT-IDENTICAL to a failure-free run (the headline), and router
+    teardown (``aclose``) leaves zero live KV blocks fleet-wide.
+
+Router tests drive the frontends manually (``fe._dispatch(fe._tick())``,
+the pump never starts) so every schedule is deterministic; the headline
+chaos test runs the real open-loop driver end to end.
+"""
+import asyncio
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import (FAULT_KINDS, FaultEvent, FaultPlan,
+                                  FaultyEngine, InjectedFault,
+                                  ReplicaCrashed)
+from repro.serving.frontend import (AsyncFrontend, CircuitBreaker,
+                                    RejectedError)
+from repro.serving.openloop import TraceItem
+from repro.serving.router import (HEALTH_STATES, ReplicaHealth,
+                                  ReplicaRouter, run_open_loop_router)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(tiny, **over):
+    cfg, params = tiny
+    kw = dict(max_batch=3, max_len=32, mode="continuous", block_size=8,
+              num_blocks=24, prefill_chunk=8, prefix_cache=True,
+              eos_id=-1)
+    kw.update(over)
+    return ServingEngine(cfg, params, **kw)
+
+
+def _never_trips():
+    return CircuitBreaker(window=4096, trip_pressure=4096,
+                          sat_threshold=2.0)
+
+
+def _wire(fe):
+    """Manual-stepping setup: what ``start()`` would do, minus the pump."""
+    fe.engine.on_token = fe._on_token
+    return fe
+
+
+def _step_until(fe, pred, limit=120):
+    for _ in range(limit):
+        fe._dispatch(fe._tick())
+        if pred():
+            return
+    raise AssertionError(f"condition not reached in {limit} ticks")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: schedules are validated, seeded, immutable
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="not in"):
+        FaultEvent("explode", 0)
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultEvent("crash", -1)
+    with pytest.raises(ValueError, match=">= 1"):
+        FaultEvent("hang", 0, duration=0)
+    with pytest.raises(ValueError, match=">= 1"):
+        FaultEvent("slow", 0, factor=0)
+    assert set(FAULT_KINDS) == {"crash", "hang", "raise", "slow"}
+
+
+def test_fault_plan_queries_and_composition():
+    p = FaultPlan.crash_at(9) + FaultPlan.hang_at(3, 5) \
+        + FaultPlan.raise_at(4) + FaultPlan.slow_from(2, 3, 4)
+    assert p.crash_tick() == 9
+    assert p.hang_at_tick(3).duration == 5
+    assert p.hang_at_tick(2) is None
+    assert p.raises_at(4) and not p.raises_at(5)
+    # slow window is [tick, tick + duration)
+    assert p.slow_at(2) is not None and p.slow_at(5) is not None
+    assert p.slow_at(6) is None and p.slow_at(1) is None
+    assert len(p) == 4
+    assert "crash@9" in p.describe() and "slow@2 x4 /3" in p.describe()
+    assert FaultPlan().describe() == "no faults"
+    assert FaultPlan().crash_tick() is None
+
+
+def test_seeded_plans_replay_identically():
+    a = FaultPlan.seeded(7, crash_p=0.5)
+    b = FaultPlan.seeded(7, crash_p=0.5)
+    assert a.events == b.events
+    # A plan with crash_p=1.0 places exactly ONE crash.
+    c = FaultPlan.seeded(3, crash_p=1.0)
+    assert sum(1 for e in c.events if e.kind == "crash") == 1
+    # Some seed in a small pool must differ from seed 7 (schedules are
+    # actually random, not constant).
+    assert any(FaultPlan.seeded(s, crash_p=0.5).events != a.events
+               for s in range(8))
+
+
+# ---------------------------------------------------------------------------
+# FaultyEngine: injection semantics at the step boundary (stub inner
+# engine — the real-engine integration is the failover tests below)
+# ---------------------------------------------------------------------------
+
+class _StubEngine:
+    """Counts real step() calls; everything FaultyEngine must delegate."""
+
+    def __init__(self):
+        self.steps = 0
+        self.on_token = None
+        self.eos_id = -1
+        self.max_len = 32
+
+    def step(self):
+        self.steps += 1
+        return [(self.steps, [1, 2, 3])]
+
+
+def test_crash_is_forever():
+    fx = FaultyEngine(_StubEngine(), FaultPlan.crash_at(2))
+    assert fx.step() and fx.step()
+    for _ in range(3):  # at and past the crash tick: dead stays dead
+        with pytest.raises(ReplicaCrashed):
+            fx.step()
+    assert fx.crashed and fx.engine.steps == 2
+    assert fx.injected == 1  # one crash event, not one per raise
+
+
+def test_hang_is_one_stalled_step_with_virtual_cost():
+    fx = FaultyEngine(_StubEngine(), FaultPlan.hang_at(1, duration=40))
+    fx.step()
+    assert fx.last_step_cost == 1
+    assert fx.step() == []          # the hung step makes no progress
+    assert fx.last_step_cost == 40  # ...and reports its stall length
+    fx.step()
+    assert fx.last_step_cost == 1   # recovered
+    assert fx.engine.steps == 2     # the hang never reached the engine
+
+
+def test_transient_raise_recovers():
+    fx = FaultyEngine(_StubEngine(), FaultPlan.raise_at(0))
+    with pytest.raises(InjectedFault):
+        fx.step()
+    assert not fx.crashed
+    assert fx.step()                # next call proceeds normally
+    assert fx.engine.steps == 1
+
+
+def test_slow_skips_beats():
+    fx = FaultyEngine(_StubEngine(), FaultPlan.slow_from(0, 2, 4))
+    progress = [bool(fx.step()) for _ in range(6)]
+    # window covers ticks 0..3 at factor 2: every other step is a
+    # skipped beat; past the window all steps progress.
+    assert progress == [True, False, True, False, True, True]
+    assert fx.engine.steps == 4
+
+
+def test_faulty_engine_delegates_everything_else():
+    inner = _StubEngine()
+    fx = FaultyEngine(inner, FaultPlan())
+    assert fx.eos_id == -1 and fx.max_len == 32  # __getattr__ passthrough
+    hook = lambda uid, tok: None
+    fx.on_token = hook
+    assert inner.on_token is hook                # setter reaches the engine
+    assert fx.engine is inner
+    assert fx.step() and fx.ticks == 1 and fx.injected == 0
+
+
+# ---------------------------------------------------------------------------
+# ReplicaHealth: the healthy -> suspect -> dead walk
+# ---------------------------------------------------------------------------
+
+def test_health_validation():
+    with pytest.raises(ValueError, match=">= 1"):
+        ReplicaHealth(deadline_ticks=0)
+    with pytest.raises(ValueError, match=">= 1"):
+        ReplicaHealth(crash_threshold=0)
+    assert HEALTH_STATES == ("healthy", "suspect", "dead")
+
+
+def test_watchdog_trip_marks_suspect():
+    h = ReplicaHealth(deadline_ticks=16)
+    assert h.record_step(cost_ticks=16) is None   # at the deadline: fine
+    assert h.record_step(cost_ticks=17) == "watchdog"
+    assert h.state == "suspect" and h.watchdog_trips == 1
+
+
+def test_only_consecutive_errors_kill():
+    h = ReplicaHealth(crash_threshold=3)
+    boom = RuntimeError("x")
+    assert h.record_step(error=boom) == "error"
+    assert h.record_step(error=boom) == "error"
+    assert h.state == "suspect"
+    h.record_step()                               # clean tick resets
+    assert h.consecutive_errors == 0 and h.state == "suspect"
+    assert h.record_step(error=boom) == "error"
+    assert h.record_step(error=boom) == "error"
+    assert h.record_step(error=boom) == "died"
+    assert h.state == "dead"
+    assert h.record_step() is None                # dead ignores everything
+    assert h.transitions == [("healthy", "suspect"), ("suspect", "dead")]
+
+
+def test_suspect_takes_probes_and_revives():
+    h = ReplicaHealth(probes=1)
+    h.record_step(cost_ticks=99)                  # -> suspect
+    assert h.can_place()
+    assert h.note_placed() is True                # this one is a probe
+    assert not h.can_place()                      # probe slot taken
+    h.record_probe_end(None)                      # cancelled: no judgement
+    assert h.state == "suspect" and h.can_place()
+    h.note_placed()
+    h.record_probe_end(True)                      # clean completion revives
+    assert h.state == "healthy"
+    assert h.note_placed() is False               # healthy placements aren't probes
+
+
+def test_draining_blocks_placement_only():
+    h = ReplicaHealth()
+    h.draining = True
+    assert not h.can_place()
+    assert h.state == "healthy"                   # drain is not a health state
+    h.draining = False
+    assert h.can_place()
+
+
+# ---------------------------------------------------------------------------
+# Engine: the poisoned-step contract
+# ---------------------------------------------------------------------------
+
+def test_poisoned_engine_contract(tiny):
+    eng = _engine(tiny)
+    eng.submit(np.arange(1, 9), max_new_tokens=2)
+
+    def boom():
+        raise RuntimeError("device exploded")
+
+    eng._step = boom
+    # A failing step whose BlockStore still passes its invariants is
+    # recoverable: the error propagates, the engine is NOT poisoned.
+    with pytest.raises(RuntimeError, match="device exploded"):
+        eng.step()
+    assert not eng.poisoned
+
+    def corrupt():
+        raise AssertionError("refcount mismatch")
+
+    eng._alloc.check_invariants = corrupt
+    with pytest.raises(RuntimeError, match="device exploded"):
+        eng.step()
+    assert eng.poisoned
+    # Poisoned engines refuse all further work, loudly.
+    with pytest.raises(RuntimeError, match="poisoned"):
+        eng.step()
+    with pytest.raises(RuntimeError, match="poisoned"):
+        eng.submit(np.arange(1, 9))
+
+
+# ---------------------------------------------------------------------------
+# Frontend: per-request wall-clock timeouts
+# ---------------------------------------------------------------------------
+
+def test_timeout_surfaces_from_stream_and_releases_blocks(tiny):
+    eng = _engine(tiny)
+    fe = _wire(AsyncFrontend(eng, breaker=_never_trips()))
+    with pytest.raises(ValueError, match="timeout_s"):
+        asyncio.run(fe.submit(np.arange(1, 9), timeout_s=0.0))
+    s = asyncio.run(fe.submit(np.arange(1, 9), max_new_tokens=20,
+                              timeout_s=0.005))
+    slow = asyncio.run(fe.submit(np.arange(2, 10), max_new_tokens=4))
+    time.sleep(0.01)  # expire the first request's wall-clock budget
+    _step_until(fe, lambda: s._ticket.cancelled)
+    with pytest.raises(RejectedError, match="wall-clock timeout") as ei:
+        asyncio.run(s.collect())
+    assert ei.value.kind == "timeout"
+    assert fe.stats.timeouts == 1
+    # The untimed request is unaffected and the pool drains clean.
+    _step_until(fe, lambda: not fe._inflight and not fe._has_engine_work())
+    assert asyncio.run(slow.collect()) == slow._ticket.result
+    assert eng.live_blocks == 0
+    eng.on_token = None
+
+
+def test_solo_frontend_fails_inflight_on_dead_engine(tiny):
+    """Without a router (no tick_observer), max_step_errors consecutive
+    step failures must fail the in-flight streams rather than hang their
+    consumers forever."""
+    fx = FaultyEngine(_engine(tiny), FaultPlan.crash_at(0))
+    fe = _wire(AsyncFrontend(fx, max_step_errors=2,
+                             breaker=_never_trips()))
+    s = asyncio.run(fe.submit(np.arange(1, 9), max_new_tokens=4))
+    _step_until(fe, lambda: fe._engine_dead, limit=4)
+    assert fe.stats.step_errors == 2
+    with pytest.raises(RuntimeError, match="engine unresponsive"):
+        asyncio.run(s.collect())
+    assert not fe._has_engine_work()  # a dead engine is never re-stepped
+    fx.on_token = None
+
+
+# ---------------------------------------------------------------------------
+# Router: watchdog -> suspect -> probe revival, drain, failover
+# ---------------------------------------------------------------------------
+
+def test_drain_excludes_replica_until_undrained(tiny):
+    r = ReplicaRouter([_engine(tiny) for _ in range(2)],
+                      policy="round_robin")
+    prompt = np.arange(1, 9)
+    r.drain(0)
+    r.drain(0)  # idempotent
+    assert r.stats.drained_replicas == 1
+    assert all(order == [1] for order in
+               [r._order(prompt, None) for _ in range(3)])
+    r.undrain(0)
+    assert r.stats.drained_replicas == 0
+    assert set(r._order(prompt, None)) == {0, 1}
+
+
+def test_hang_trips_watchdog_then_probe_revives(tiny):
+    """A hung step marks the replica suspect; with every peer drained it
+    takes exactly one probe placement, and the probe's clean completion
+    revives it to healthy."""
+    fx = FaultyEngine(_engine(tiny), FaultPlan.hang_at(0, duration=64))
+    r = ReplicaRouter(
+        [fx, _engine(tiny)], policy="round_robin",
+        health_factory=lambda: ReplicaHealth(deadline_ticks=16, probes=1))
+    fe0 = _wire(r.frontends[0])
+    s1 = asyncio.run(r.submit(np.arange(1, 9), max_new_tokens=3))
+    fe0._dispatch(fe0._tick())  # the hung step: cost 64 > deadline 16
+    assert r.health[0].state == "suspect"
+    assert r.stats.watchdog_trips == 1
+    r.drain(1)  # force the next placement onto the suspect replica
+    s2 = asyncio.run(r.submit(np.arange(2, 10), max_new_tokens=3))
+    assert r.stats.per_replica == [2, 0]
+    # Probe slot taken + peer draining: the fleet refuses placements.
+    with pytest.raises(RejectedError, match="no replica accepts") as ei:
+        asyncio.run(r.submit(np.arange(3, 11), max_new_tokens=1))
+    assert ei.value.kind == "breaker"
+    _step_until(fe0, lambda: not fe0._inflight
+                and not fe0._has_engine_work())
+    assert asyncio.run(s2.collect()) == s2._ticket.result
+    assert r.health[0].state == "healthy"  # the probe revived it
+    assert asyncio.run(s1.collect()) == s1._ticket.result
+    r.undrain(1)
+    asyncio.run(r.aclose())
+
+
+def test_failover_resumes_midstream_bit_identically(tiny):
+    """Kill a replica after it has streamed part of a request: the
+    request is re-homed as prompt + emitted tokens, the client stream
+    continues in place, and the full output equals the solo-engine run
+    (never a duplicated or missing token)."""
+    prompt, budget = np.arange(1, 9), 6
+    ref = _engine(tiny)
+    ref_uid = ref.submit(prompt, max_new_tokens=budget)
+    ref_out = ref.run()[ref_uid]
+
+    # Tick 0 prefills, then a few decode ticks emit tokens; the crash at
+    # tick 3 lands mid-decode with part of the stream already delivered.
+    fx = FaultyEngine(_engine(tiny), FaultPlan.crash_at(3))
+    r = ReplicaRouter([fx, _engine(tiny)], policy="round_robin",
+                      health_factory=lambda: ReplicaHealth(
+                          crash_threshold=2))
+    fe0, fe1 = (_wire(fe) for fe in r.frontends)
+    s = asyncio.run(r.submit(prompt, max_new_tokens=budget))
+    for _ in range(6):  # 3 real steps, then crashing ones
+        fe0._dispatch(fe0._tick())
+    assert r.health[0].state == "dead"
+    emitted_before = list(s._ticket.emitted)
+    assert 0 < len(emitted_before) < budget, \
+        "crash must land mid-decode for this test to mean anything"
+    assert r._dead_pending == [0]  # no loop ran: failover is ours to run
+    assert asyncio.run(r.fail_over_dead()) == 1
+    assert r.stats.failovers == 1 and r.stats.replica_deaths == 1
+    assert fx.engine.live_blocks == 0  # dead replica's KV released
+    assert s._ticket.successor is not None
+    _step_until(fe1, lambda: s.done)
+    assert s.uid is not None  # resolves through the live incarnation
+    assert asyncio.run(s.collect()) == ref_out
+    assert r.fault_report()["health"] == ["dead", "healthy"]
+    asyncio.run(r.aclose())
+
+
+def test_retry_budget_exhaustion_surfaces_timeout(tiny):
+    """With zero retry budget a victim request is not re-homed — its
+    stream ends with RejectedError(kind='timeout') instead of hanging."""
+    fx = FaultyEngine(_engine(tiny), FaultPlan.crash_at(1))
+    r = ReplicaRouter([fx, _engine(tiny)], policy="round_robin",
+                      health_factory=lambda: ReplicaHealth(
+                          crash_threshold=2),
+                      retry_budget=0)
+    fe0 = _wire(r.frontends[0])
+    s = asyncio.run(r.submit(np.arange(1, 9), max_new_tokens=4))
+    for _ in range(4):
+        fe0._dispatch(fe0._tick())
+    assert r.health[0].state == "dead"
+    asyncio.run(r.fail_over_dead())
+    assert r.stats.failovers == 0
+    with pytest.raises(RejectedError, match="retry budget") as ei:
+        asyncio.run(s.collect())
+    assert ei.value.kind == "timeout"
+    asyncio.run(r.aclose())
+
+
+def test_aclose_cancels_inflight_and_releases_all_blocks(tiny):
+    """Teardown with streams still open: every replica ends with zero
+    live blocks (the stream-leak fix this PR pins)."""
+    r = ReplicaRouter([_engine(tiny) for _ in range(2)],
+                      policy="round_robin")
+    for fe in r.frontends:
+        _wire(fe)
+    streams = [asyncio.run(r.submit(np.arange(1 + k, 9 + k),
+                                    max_new_tokens=20))
+               for k in range(3)]
+    for fe in r.frontends:  # start work, never finish it
+        fe._dispatch(fe._tick())
+        fe._dispatch(fe._tick())
+    assert any(fe.engine.live_blocks > 0 for fe in r.frontends)
+    asyncio.run(r.aclose())
+    assert all(fe.engine.live_blocks == 0 for fe in r.frontends)
+    for s in streams:  # ended, not hung: a prefix, then termination
+        toks = asyncio.run(s.collect())
+        assert len(toks) <= 20
+
+
+# ---------------------------------------------------------------------------
+# Headline: chaos run through the real open-loop driver
+# ---------------------------------------------------------------------------
+
+def test_crash_one_replica_chaos_run_is_bit_identical(tiny):
+    """3 replicas, a seeded crash-one-replica-mid-decode fault plan:
+    every request completes via failover, availability stays 1.0, and
+    each stream is bit-identical to the failure-free run."""
+    cfg, _ = tiny
+    rng = np.random.default_rng(7)
+    trace = [TraceItem(
+        arrival_s=0.01 * i,
+        prompt=rng.integers(1, cfg.vocab_size, size=8).astype(np.int32),
+        max_new_tokens=10) for i in range(6)]
+
+    clean_rep, _ = run_open_loop_router(
+        [_engine(tiny) for _ in range(3)], trace, policy="round_robin")
+    assert all(rec.status == "completed" for rec in clean_rep.records)
+
+    engines = [FaultyEngine(_engine(tiny), FaultPlan.crash_at(6)),
+               _engine(tiny), _engine(tiny)]
+    chaos_rep, router = run_open_loop_router(
+        engines, trace, policy="round_robin")
+
+    assert engines[0].crashed
+    assert [rec.status for rec in chaos_rep.records] == ["completed"] * 6
+    assert [rec.tokens for rec in chaos_rep.records] \
+        == [rec.tokens for rec in clean_rep.records], \
+        "failover must not change a single token"
+    assert chaos_rep.availability == 1.0
+    summary = chaos_rep.summary(slo_ttft_s=10.0)
+    ft = summary["fault_tolerance"]
+    assert ft["replica_deaths"] == 1
+    assert ft["failovers"] >= 1
+    assert ft["health"] == ["dead", "healthy", "healthy"]
+    if router.failover_ttft_s:
+        assert ft["failover_p99_ttft_s"] > 0.0
